@@ -1,0 +1,127 @@
+"""Shared helpers for the paper-figure benchmarks."""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.core.master import MasterConfig
+from repro.core.worker import Query
+from repro.sim.cluster import Cluster, make_cluster, serving_archs
+
+Row = Tuple[str, float, str]   # (name, us_per_call, derived)
+
+
+def pct(xs: Sequence[float], q: float) -> float:
+    return float(np.percentile(np.asarray(xs), q)) if len(xs) else float("nan")
+
+
+def steady_metrics(queries: List[Query], t0: float, t1: float,
+                   warmup: float = 20.0) -> Dict[str, float]:
+    """Throughput / violation-rate over [t0+warmup, t1] (paper Fig. 13)."""
+    done = [q for q in queries
+            if q.finish >= t0 + warmup and q.finish <= t1 and not q.failed]
+    viol = [q for q in done if q.violated]
+    lat = [q.latency for q in done]
+    span = max(t1 - t0 - warmup, 1e-9)
+    return {
+        "completed": len(done),
+        "throughput_qps": sum(q.n_inputs for q in done) / span,
+        "violation_rate": len(viol) / max(len(done), 1),
+        "p50_ms": pct(lat, 50) * 1e3,
+        "p99_ms": pct(lat, 99) * 1e3,
+    }
+
+
+def cluster_cost(c: Cluster, t_end: float) -> float:
+    """Chip-second cost units: sum of worker hardware cost rates x uptime
+    (approximated as full-run uptime for workers alive at the end plus
+    heartbeat-observed lifetime for the dead)."""
+    from repro.sim import hardware as HW
+    cost = 0.0
+    for w in c.store.workers.values():
+        alive_span = (w.heartbeat if not w.alive else t_end)
+        rate = sum(HW.HARDWARE[h].cost_rate for h in w.hardware
+                   if h != "cpu-host") or HW.HARDWARE["cpu-host"].cost_rate
+        cost += rate * max(alive_span, 0.0)
+    return cost
+
+
+class UsageCostTracker:
+    """Paper §8.4 cost accounting: at each timestep, charge for an
+    accelerator only if an accelerator model is loaded, else CPU rate."""
+
+    def __init__(self, c: Cluster, period: float = 2.0):
+        from repro.sim import hardware as HW
+        self.cost = 0.0
+        self.period = period
+
+        def sample():
+            for w in c.master.workers.values():
+                if not w.alive:
+                    continue
+                accel_used = any(li.variant.is_accel
+                                 for li in w.instances.values())
+                cpu_used = any(not li.variant.is_accel
+                               for li in w.instances.values())
+                rate = 0.0
+                if accel_used:
+                    rate += sum(HW.HARDWARE[h].cost_rate
+                                for h in w.hardware if h != "cpu-host")
+                if cpu_used or not accel_used:
+                    rate += HW.HARDWARE["cpu-host"].cost_rate
+                self.cost += rate * period
+        c.loop.every(period, sample)
+
+
+def util_series(c: Cluster) -> Dict[str, float]:
+    cpu, accel = [], []
+    for w in c.store.workers.values():
+        if not w.alive:
+            continue
+        for h, u in w.util.items():
+            (cpu if h == "cpu-host" else accel).append(u)
+    return {"cpu_util": float(np.mean(cpu)) if cpu else 0.0,
+            "accel_util": float(np.mean(accel)) if accel else 0.0}
+
+
+class UtilTracker:
+    """Time-averaged cluster utilization + peak worker count (fig. 14)."""
+
+    def __init__(self, c: Cluster, period: float = 2.0, t_end: float = None):
+        self.cpu: List[float] = []
+        self.accel: List[float] = []
+        self.peak_workers = 0
+
+        def sample():
+            if t_end is not None and c.loop.now() > t_end:
+                return
+            s = util_series(c)
+            self.cpu.append(s["cpu_util"])
+            self.accel.append(s["accel_util"])
+            self.peak_workers = max(
+                self.peak_workers,
+                sum(1 for w in c.store.workers.values() if w.alive))
+        c.loop.every(period, sample)
+
+    def summary(self) -> Dict[str, float]:
+        return {
+            "cpu_util": float(np.mean(self.cpu)) if self.cpu else 0.0,
+            "accel_util": float(np.mean(self.accel)) if self.accel else 0.0,
+            "peak_workers": float(self.peak_workers),
+        }
+
+
+def baseline_variant(c: Cluster, arch: str):
+    """Paper §8.5 baseline user choice: fastest CPU variant if one exists,
+    else the fastest smallest-batch accelerator variant (restricted to
+    hardware the cluster's workers actually have)."""
+    have = {h for w in c.master.workers.values() for h in w.hardware}
+    vs = [v for v in c.store.registry.variants_of(arch) if v.hardware in have]
+    cpu = [v for v in vs if not v.is_accel]
+    if cpu:
+        return min(cpu, key=lambda v: v.profile.latency(1))
+    accel = sorted(vs, key=lambda v: (v.batch_opt, v.profile.latency(1)))
+    return accel[0]

@@ -1,0 +1,50 @@
+"""Fig. 10: co-locating online and offline queries on one worker.
+
+Paper finding: INFaaS keeps online latency/throughput intact by throttling
+offline work under SLO pressure, while the offline job absorbs slack.
+"""
+from __future__ import annotations
+
+from typing import List
+
+from repro.configs.registry import ARCHS
+from repro.sim.cluster import make_cluster
+from repro.sim.workload import poisson_arrivals, ramp_rate
+from benchmarks.common import Row, steady_metrics
+
+ARCH = ARCHS["llama3.2-1b"]
+
+
+def _run(with_offline: bool, t_end: float = 80.0):
+    c = make_cluster(n_accel=1, archs=[ARCH], autoscale=False)
+    if with_offline:
+        job = c.api.offline_query(mod_arch=ARCH.name, n_inputs=5000)
+    else:
+        job = None
+    rate = ramp_rate(t_end, 2.0, 120.0)
+    poisson_arrivals(
+        c.loop, rate,
+        lambda t: c.api.online_query(mod_arch=ARCH.name, latency_ms=500),
+        t_end=t_end, seed=11)
+    c.run_until(t_end + 30.0)
+    online = [q for q in c.master.metrics if q.kind == "online"]
+    m = steady_metrics(online, 0.0, t_end, warmup=10.0)
+    return m, job
+
+
+def run(verbose: bool = True) -> List[Row]:
+    alone, _ = _run(False)
+    shared, job = _run(True)
+    thr_ratio = shared["throughput_qps"] / max(alone["throughput_qps"], 1e-9)
+    lat_ratio = shared["p50_ms"] / max(alone["p50_ms"], 1e-9)
+    if verbose:
+        print(f"# fig10: online alone p50={alone['p50_ms']:.1f}ms "
+              f"viol={alone['violation_rate']:.3f} | with offline "
+              f"p50={shared['p50_ms']:.1f}ms viol={shared['violation_rate']:.3f}"
+              f" | offline processed {job.processed}/{job.total_inputs}")
+    return [
+        ("fig10_online_thr_ratio", thr_ratio, "colocated_vs_alone"),
+        ("fig10_online_p50_ratio", lat_ratio, "colocated_vs_alone"),
+        ("fig10_offline_processed", float(job.processed),
+         f"of_{job.total_inputs}_best_effort"),
+    ]

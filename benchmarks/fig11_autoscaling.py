@@ -1,0 +1,114 @@
+"""Fig. 11: autoscaling strategies under a load+SLO swing.
+
+ResNet50 analogue (llama3.2-1b) on one accelerator worker; load ramps
+5 -> peak -> 5 images/s while the SLO switches 500ms -> 20ms -> 500ms.
+Strategies: GPU-S (static accel b8), CPU-S (static 2 CPU replicas),
+INDV (replication only, no upgrades), INFaaS (replication + upgrading).
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import numpy as np
+
+from repro.configs.registry import ARCHS
+from repro.core.master import MasterConfig
+from repro.sim.cluster import make_cluster
+from repro.sim.workload import poisson_arrivals
+from benchmarks.common import (Row, UsageCostTracker, cluster_cost,
+                               steady_metrics)
+
+ARCH = ARCHS["llama3.2-1b"]
+# relaxed ramp, strict peak, long relaxed tail (the tail is where INFaaS's
+# downgrade ladder pays off vs the statically-provisioned GPU)
+T_PHASE = (30.0, 50.0, 140.0)
+
+
+def _load_and_slo(c, peak_rate: float, seed: int, variant: str = None):
+    t1, t2, t3 = T_PHASE
+    total = t1 + t2 + t3
+    tracker = UsageCostTracker(c)
+
+    def rate(t):
+        if t < t1:
+            return 5.0 + (0.3 * peak_rate - 5.0) * t / t1
+        if t < t1 + t2:
+            u = (t - t1) / t2
+            return 0.3 * peak_rate + (peak_rate - 0.3 * peak_rate) * \
+                (1 - abs(2 * u - 1))
+        return max(5.0, 0.3 * peak_rate * (1 - (t - t1 - t2) / t3))
+
+    def slo_ms(t):
+        return 20.0 if t1 <= t < t1 + t2 else 500.0
+
+    def fire(t):
+        # baselines pin the user-chosen variant; INFaaS is model-less
+        if variant is not None:
+            c.api.online_query(mod_var=variant, latency_ms=slo_ms(t))
+        else:
+            c.api.online_query(mod_arch=ARCH.name, latency_ms=slo_ms(t))
+
+    poisson_arrivals(c.loop, rate, fire, t_end=total, seed=seed)
+    c.run_until(total + 20.0)
+    m = steady_metrics(c.master.metrics, 0.0, total, warmup=5.0)
+    m["cost"] = tracker.cost
+    return m
+
+
+def _static(variant_filter, replicas: int = 1, kind: str = "accel",
+            worker_autoscale: bool = False, allow_upgrade: bool = True):
+    cfg = MasterConfig(worker_autoscale=worker_autoscale,
+                       allow_upgrade=allow_upgrade)
+    c = make_cluster(n_accel=1 if kind == "accel" else 0,
+                     n_cpu=0 if kind == "accel" else 1,
+                     archs=[ARCH], autoscale=False, cfg=cfg)
+    v = [x for x in c.store.registry.variants.values() if variant_filter(x)][0]
+    w = next(iter(c.master.workers.values()))
+    w.load_variant(v, replicas=replicas)
+    c.run_until(5.0)
+    return c, v
+
+
+def run(verbose: bool = True) -> List[Row]:
+    from repro.core import profiler as prof
+    from repro.sim import hardware as HW
+    peak = prof.analytic_profile(
+        ARCH, HW.HARDWARE["tpu-v5e-1"], "bf16", 8).peak_qps * 0.9
+
+    results: Dict[str, Dict[str, float]] = {}
+
+    c, v = _static(lambda v: v.hardware == "tpu-v5e-1" and v.batch_opt == 8
+                   and "bf16" in v.framework)
+    results["GPU-S"] = _load_and_slo(c, peak, seed=1, variant=v.name)
+
+    c, v = _static(lambda v: v.hardware == "cpu-host"
+                   and "bf16" in v.framework, replicas=2, kind="cpu")
+    results["CPU-S"] = _load_and_slo(c, peak, seed=2, variant=v.name)
+
+    # INDV: user-pinned accel batch-1 variant + CPU replication only
+    c, v = _static(lambda v: v.hardware == "tpu-v5e-1" and v.batch_opt == 1
+                   and "bf16" in v.framework,
+                   worker_autoscale=True, allow_upgrade=False)
+    results["INDV"] = _load_and_slo(c, peak, seed=3, variant=v.name)
+
+    c = make_cluster(n_accel=1, archs=[ARCH], autoscale=False)
+    results["INFaaS"] = _load_and_slo(c, peak, seed=4)
+
+    if verbose:
+        for name, m in results.items():
+            print(f"# fig11 {name:7s}: thr={m['throughput_qps']:8.1f} q/s "
+                  f"viol={m['violation_rate']:.3f} p50={m['p50_ms']:.2f}ms "
+                  f"cost={m['cost']:.0f}")
+    inf = results["INFaaS"]
+    rows = [("fig11_infaas_vs_gpus_cost",
+             results["GPU-S"]["cost"] / max(inf["cost"], 1e-9),
+             "gpu_static_cost_x_infaas"),
+            ("fig11_infaas_vs_cpus_thr",
+             inf["throughput_qps"] /
+             max(results["CPU-S"]["throughput_qps"], 1e-9),
+             "throughput_x_cpu_static"),
+            ("fig11_infaas_vs_indv_viol",
+             results["INDV"]["violation_rate"] /
+             max(inf["violation_rate"], 1e-3),
+             "indv_viol_x_infaas")]
+    return rows

@@ -1,0 +1,38 @@
+"""Fig. 2: the model-variant search space (latency / memory / accuracy).
+
+The paper plots 44 architectures x 270 variants for image classification;
+here the profiler-generated zoo for the 10 assigned architectures.
+"""
+from __future__ import annotations
+
+from typing import List
+
+from repro.configs.registry import ARCHS
+from repro.core import profiler as prof
+from repro.core.abstraction import Registry
+from benchmarks.common import Row
+
+
+def run(verbose: bool = True) -> List[Row]:
+    reg = Registry()
+    n = prof.register_all(reg, list(ARCHS.values()))
+    variants = list(reg.variants.values())
+    lats = [v.profile.latency(1) * 1e3 for v in variants]
+    mems = [v.profile.peak_memory / 2**20 for v in variants]
+    if verbose:
+        print(f"# fig2: {len(reg.archs)} architectures, {n} variants")
+        print("# variant,hardware,batch_opt,lat_b1_ms,load_s,mem_MiB,accuracy")
+        for v in sorted(variants, key=lambda v: (v.arch, v.name)):
+            print(f"#   {v.name},{v.hardware},{v.batch_opt},"
+                  f"{v.profile.latency(1)*1e3:.3f},"
+                  f"{v.profile.load_latency:.2f},"
+                  f"{v.profile.peak_memory/2**20:.0f},{v.accuracy:.3f}")
+    lat_spread = max(lats) / min(lats)
+    mem_spread = max(mems) / min(mems)
+    return [
+        ("fig2_num_variants", float(n), f"{len(reg.archs)}_archs"),
+        ("fig2_latency_spread_x", lat_spread,
+         f"{min(lats):.2f}-{max(lats):.1f}ms"),
+        ("fig2_memory_spread_x", mem_spread,
+         f"{min(mems):.0f}-{max(mems):.0f}MiB"),
+    ]

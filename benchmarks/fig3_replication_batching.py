@@ -1,0 +1,75 @@
+"""Figs. 3/4: replication vs adaptive batching, accelerator vs host CPU.
+
+Paper finding: on the accelerator, adaptive batching lifts throughput ~2.5x
+with little latency cost while replication barely helps (and is disallowed);
+on CPU, replication doubles throughput while batching helps little.
+"""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+from repro.configs.registry import ARCHS
+from repro.sim.cluster import make_cluster
+from repro.sim.workload import poisson_arrivals
+from benchmarks.common import Row, steady_metrics
+
+ARCH = ARCHS["llama3.2-1b"]
+
+
+def _drive(kind: str, batch_opt: int, replicas: int, rate: float,
+           t_end: float = 40.0):
+    c = make_cluster(n_accel=1 if kind == "accel" else 0,
+                     n_cpu=0 if kind == "accel" else 1,
+                     archs=[ARCH], autoscale=False,
+                     )
+    # pin the exact variant under test; disable worker autoscaling
+    for w in c.master.workers.values():
+        w.cfg = w.cfg.__class__(**{**w.cfg.__dict__})
+    hw = "tpu-v5e-1" if kind == "accel" else "cpu-host"
+    cands = [v for v in c.store.registry.variants.values()
+             if v.hardware == hw and v.batch_opt == batch_opt]
+    v = cands[0]
+    w = next(iter(c.master.workers.values()))
+    w.load_variant(v, replicas=replicas)
+    c.run_until(10.0)
+    poisson_arrivals(
+        c.loop, lambda t: rate,
+        lambda t: c.api.online_query(mod_var=v.name, latency_ms=60_000),
+        t_end=t_end, seed=7)
+    c.run_until(10.0 + t_end + 10.0)
+    m = steady_metrics(c.master.metrics, 10.0, 10.0 + t_end, warmup=5.0)
+    return m
+
+
+def run(verbose: bool = True) -> List[Row]:
+    # drive each configuration at 90% of ITS OWN capacity and report the
+    # sustained throughput + median latency (paper Figs. 3/4 axes)
+    from repro.core import profiler as prof
+    from repro.sim import hardware as HW
+    b1 = prof.analytic_profile(ARCH, HW.HARDWARE["tpu-v5e-1"], "bf16", 1)
+    b8 = prof.analytic_profile(ARCH, HW.HARDWARE["tpu-v5e-1"], "bf16", 8)
+    accel_b1 = _drive("accel", 1, 1, b1.peak_qps * 0.9)
+    accel_b8 = _drive("accel", 8, 1, b8.peak_qps * 0.9)
+    cpu = prof.analytic_profile(ARCH, HW.HARDWARE["cpu-host"], "bf16", 8)
+    cpu_r1 = _drive("cpu", 8, 1, cpu.peak_qps * 0.9)
+    cpu_r2 = _drive("cpu", 8, 2, cpu.peak_qps * 1.8)
+    batching_gain = accel_b8["throughput_qps"] / max(
+        accel_b1["throughput_qps"], 1e-9)
+    replication_gain = cpu_r2["throughput_qps"] / max(
+        cpu_r1["throughput_qps"], 1e-9)
+    lat_cost = accel_b8["p50_ms"] / max(accel_b1["p50_ms"], 1e-9)
+    if verbose:
+        print(f"# fig3: accel b1 {accel_b1['throughput_qps']:.0f} q/s "
+              f"p50 {accel_b1['p50_ms']:.1f} ms | "
+              f"accel b8 {accel_b8['throughput_qps']:.0f} q/s "
+              f"p50 {accel_b8['p50_ms']:.1f} ms")
+        print(f"# fig4: cpu 1-rep {cpu_r1['throughput_qps']:.1f} q/s "
+              f"p50 {cpu_r1['p50_ms']:.0f} ms | cpu 2-rep "
+              f"{cpu_r2['throughput_qps']:.1f} q/s "
+              f"p50 {cpu_r2['p50_ms']:.0f} ms")
+    return [
+        ("fig3_accel_batching_throughput_x", batching_gain,
+         f"paper_~2.5x_latency_cost_{lat_cost:.2f}x"),
+        ("fig4_cpu_replication_throughput_x", replication_gain,
+         "paper_~2x_2rep_vs_1rep"),
+    ]

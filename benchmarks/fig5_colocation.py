@@ -1,0 +1,78 @@
+"""Figs. 5/9: co-locating a large and a small model on one accelerator.
+
+Paper finding: at low load sharing is free; at high load the small model
+suffers (the large one is mostly unaffected) -> sharing must be managed.
+INFaaS (autoscaling on) detects the SLO violations and scales out.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.configs.registry import ARCHS
+from repro.sim.cluster import make_cluster
+from repro.sim.workload import poisson_arrivals
+from benchmarks.common import Row, steady_metrics
+
+LARGE = ARCHS["yi-9b"]        # Inception-ResNetV2 analogue
+SMALL = ARCHS["llama3.2-1b"]  # MobileNetV1 analogue
+
+
+def _run(shared: bool, rate_frac: float, autoscale: bool = False,
+         t_end: float = 40.0) -> Dict[str, Dict[str, float]]:
+    c = make_cluster(n_accel=1 if shared else 2, archs=[LARGE, SMALL],
+                     autoscale=autoscale)
+    pick = {}
+    for cfgA in (LARGE, SMALL):
+        v = [x for x in c.store.registry.variants.values()
+             if x.arch == cfgA.name and x.hardware == "tpu-v5e-1"
+             and x.batch_opt == 1 and "int8" in x.framework][0]
+        pick[cfgA.name] = v
+    workers = list(c.master.workers.values())
+    if shared:
+        for v in pick.values():
+            workers[0].load_variant(v)
+    else:
+        workers[0].load_variant(pick[LARGE.name])
+        workers[1].load_variant(pick[SMALL.name])
+    c.run_until(10.0)
+    rate_large = pick[LARGE.name].profile.peak_qps * rate_frac
+    rate_small = pick[SMALL.name].profile.peak_qps * rate_frac
+    for arch, rate, seed in ((LARGE.name, rate_large, 1),
+                             (SMALL.name, rate_small, 2)):
+        vn = pick[arch].name
+        poisson_arrivals(
+            c.loop, (lambda r: lambda t: r)(rate),
+            (lambda vv: lambda t: c.api.online_query(
+                mod_var=vv, latency_ms=1000))(vn),
+            t_end=t_end, seed=seed)
+    c.run_until(10.0 + t_end + 20.0)
+    out = {}
+    for arch in (LARGE.name, SMALL.name):
+        qs = [q for q in c.master.metrics
+              if q.variant.startswith(arch) and q.kind == "online"]
+        out[arch] = steady_metrics(qs, 10.0, 10.0 + t_end, warmup=5.0)
+    return out
+
+
+def run(verbose: bool = True) -> List[Row]:
+    # high load = each model at 45% of its solo capacity: fine alone, but
+    # the shared device is then at ~90% combined -> queueing interference
+    lo_alone = _run(shared=False, rate_frac=0.15)
+    lo_shared = _run(shared=True, rate_frac=0.15)
+    hi_alone = _run(shared=False, rate_frac=0.45)
+    hi_shared = _run(shared=True, rate_frac=0.45)
+
+    def r(metric, a, b):
+        return b[metric] / max(a[metric], 1e-9)
+    small_lo = r("p50_ms", lo_alone[SMALL.name], lo_shared[SMALL.name])
+    small_hi = r("p50_ms", hi_alone[SMALL.name], hi_shared[SMALL.name])
+    large_hi = r("p50_ms", hi_alone[LARGE.name], hi_shared[LARGE.name])
+    if verbose:
+        print(f"# fig5: small-model p50 sharing penalty: low load "
+              f"{small_lo:.2f}x, high load {small_hi:.2f}x; "
+              f"large model at high load {large_hi:.2f}x")
+    return [
+        ("fig5_small_penalty_lowload_x", small_lo, "shared_vs_alone_p50"),
+        ("fig5_small_penalty_highload_x", small_hi, "shared_vs_alone_p50"),
+        ("fig5_large_penalty_highload_x", large_hi, "shared_vs_alone_p50"),
+    ]

@@ -1,0 +1,50 @@
+"""Fig. 8: the linear latency model t(b) = m*b + c fitted from batches
+{1,4,8} must predict latencies at larger batch sizes (R^2 check against the
+full roofline curve at b in 1..64)."""
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+
+from repro.configs.registry import ARCHS
+from repro.core import profiler as prof
+from repro.sim import hardware as HW
+from benchmarks.common import Row
+
+
+def run(verbose: bool = True) -> List[Row]:
+    r2s = []
+    worst = ("", 1.0)
+    for cfg in ARCHS.values():
+        for hw_name in ("cpu-host", "tpu-v5e-1"):
+            hw = HW.HARDWARE[hw_name]
+            wl = prof.workload_model(cfg)
+            for dtype in ("bf16",):
+                wbytes = wl.n_total * prof.DTYPE_BYTES[dtype]
+                batch_opt = 64
+                p = prof.analytic_profile(cfg, hw, dtype, batch_opt)
+                if p.peak_memory > hw.mem_capacity:
+                    continue
+                # evaluate inside the variant's own operating range
+                bs = np.array([1, 2, 4, 8, 16, 24, 32, 48, 64])
+                bs = bs[bs <= batch_opt]
+                truth = np.array([
+                    HW.roofline_latency(wl.flops(int(b)),
+                                        wl.bytes_moved(int(b), wbytes), hw,
+                                        0.6 if hw.kind == "accel" else 0.35)
+                    + prof._dispatch_overhead(hw) for b in bs])
+                pred = p.m * bs + p.c
+                ss_res = float(np.sum((truth - pred) ** 2))
+                ss_tot = float(np.sum((truth - truth.mean()) ** 2))
+                r2 = 1.0 - ss_res / max(ss_tot, 1e-30)
+                r2s.append(r2)
+                if r2 < worst[1]:
+                    worst = (f"{cfg.name}/{hw_name}", r2)
+    if verbose:
+        print(f"# fig8: linear-fit R^2 over {len(r2s)} (arch,hw) curves: "
+              f"median={np.median(r2s):.4f} worst={worst[1]:.4f} ({worst[0]})")
+    return [
+        ("fig8_r2_median", float(np.median(r2s)), "linear_fit_quality"),
+        ("fig8_r2_worst", float(worst[1]), worst[0]),
+    ]

@@ -1,0 +1,63 @@
+"""§Roofline table: read the dry-run JSONL manifest and print the per-cell
+roofline terms (compute/memory/collective seconds, dominant term, useful-
+FLOPs ratio). Source of EXPERIMENTS.md §Roofline."""
+from __future__ import annotations
+
+import json
+import os
+from typing import List
+
+from benchmarks.common import Row
+
+DEFAULT_PATH = os.path.join(os.path.dirname(__file__), "..",
+                            "dryrun_results.jsonl")
+
+
+def load_records(path: str = DEFAULT_PATH):
+    if not os.path.exists(path):
+        return []
+    recs = {}
+    with open(path) as f:
+        for line in f:
+            r = json.loads(line)
+            recs[(r["arch"], r["shape"], r["mesh"])] = r   # last write wins
+    return list(recs.values())
+
+
+def run(verbose: bool = True, path: str = DEFAULT_PATH) -> List[Row]:
+    recs = load_records(path)
+    if not recs:
+        print(f"# roofline: no dry-run manifest at {path} "
+              "(run python -m repro.launch.dryrun --all --out "
+              "dryrun_results.jsonl)")
+        return [("roofline_cells", 0.0, "missing_manifest")]
+    ok = [r for r in recs if r["status"] == "ok"]
+    skipped = [r for r in recs if r["status"] == "skipped"]
+    err = [r for r in recs if r["status"] == "error"]
+    if verbose:
+        print("# arch,shape,mesh,compute_s,memory_s,collective_s,dominant,"
+              "useful_flops_ratio,peak_GiB")
+        for r in sorted(ok, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+            t = r["roofline"]
+            print(f"#   {r['arch']},{r['shape']},{r['mesh']},"
+                  f"{t['compute_s']:.4g},{t['memory_s']:.4g},"
+                  f"{t['collective_s']:.4g},{t['dominant']},"
+                  f"{t['useful_flops_ratio']:.3f},"
+                  f"{r['bytes_per_device']['peak']/2**30:.2f}")
+        for r in skipped:
+            print(f"#   {r['arch']},{r['shape']},{r['mesh']},SKIPPED,"
+                  f"{r['reason'][:60]}")
+    dominant = {}
+    for r in ok:
+        dominant[r["roofline"]["dominant"]] = \
+            dominant.get(r["roofline"]["dominant"], 0) + 1
+    return [
+        ("roofline_cells_ok", float(len(ok)), f"skipped_{len(skipped)}"
+         f"_err_{len(err)}"),
+        ("roofline_memory_bound_cells",
+         float(dominant.get("memory", 0)), "dominant=memory"),
+        ("roofline_compute_bound_cells",
+         float(dominant.get("compute", 0)), "dominant=compute"),
+        ("roofline_collective_bound_cells",
+         float(dominant.get("collective", 0)), "dominant=collective"),
+    ]

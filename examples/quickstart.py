@@ -1,0 +1,54 @@
+"""Quickstart: register models, inspect the model-less registry, and issue
+online queries at all three granularities (variant / arch / use-case).
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import sys
+
+from repro.configs.registry import ARCHS
+from repro.sim.cluster import make_cluster
+
+
+def main() -> None:
+    # one accelerator worker + one CPU worker, INFaaS autoscaling on
+    cluster = make_cluster(n_accel=1, n_cpu=1,
+                           archs=[ARCHS["llama3.2-1b"], ARCHS["yi-9b"],
+                                  ARCHS["whisper-base"]])
+    api = cluster.api
+
+    print("== model_info (the model-less registry) ==")
+    for info in api.model_info(task="text-generation",
+                               dataset="openwebtext"):
+        print(f"  {info['arch']}: accuracy={info['accuracy']:.2f}, "
+              f"{len(info['variants'])} variants")
+        for v in info["variants"][:3]:
+            print(f"     e.g. {v['name']}  lat_b1={v['latency_b1_ms']:.2f}ms"
+                  f" load={v['load_ms']:.0f}ms mem={v['mem_mb']:.0f}MB")
+
+    print("\n== online queries ==")
+    # 1. use-case granularity: task + dataset + accuracy + latency
+    q1 = api.online_query(task="text-generation", dataset="openwebtext",
+                          accuracy=0.60, latency_ms=50)
+    # 2. arch granularity: architecture + latency
+    q2 = api.online_query(mod_arch="yi-9b", latency_ms=100)
+    # 3. expert granularity: exact variant
+    vname = next(iter(cluster.store.registry.variants))
+    q3 = api.online_query(mod_var=vname)
+    cluster.run_until(30.0)
+    for name, q in (("use-case", q1), ("arch", q2), ("variant", q3)):
+        status = "FAILED" if q.failed else f"{q.latency*1e3:.1f} ms"
+        print(f"  {name:9s} -> served by {q.variant:45s} latency={status}")
+
+    print("\n== offline (best-effort) query ==")
+    job = api.offline_query(mod_arch="llama3.2-1b", n_inputs=200)
+    cluster.run_until(120.0)
+    print(f"  processed {job.processed}/{job.total_inputs} inputs "
+          "in slack capacity")
+
+    print("\n== decision overheads recorded by the master ==")
+    for mode, needs_load, us in cluster.master.decision_log:
+        print(f"  {mode:8s} needs_load={needs_load!s:5s} {us:8.1f} us")
+
+
+if __name__ == "__main__":
+    main()

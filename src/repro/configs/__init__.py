@@ -1,0 +1,14 @@
+from repro.configs.base import ArchConfig  # noqa: F401
+from repro.configs.shapes import (ALL_SHAPES, SHAPES, ShapeConfig,  # noqa: F401
+                                  shape_applicable)
+
+__all__ = ["ArchConfig", "ShapeConfig", "ALL_SHAPES", "SHAPES",
+           "shape_applicable", "ARCHS", "get_arch"]
+
+
+def __getattr__(name):
+    # lazy to avoid importing all config modules unless needed
+    if name in ("ARCHS", "get_arch"):
+        from repro.configs import registry
+        return getattr(registry, name)
+    raise AttributeError(name)

@@ -1,0 +1,19 @@
+"""qwen3-moe-235b-a22b [moe] — 128 experts top-8. [hf:Qwen/Qwen3-30B-A3B; hf]"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen3-moe-235b-a22b",
+    family="moe",
+    n_layers=94,
+    d_model=4096,
+    n_heads=64,
+    n_kv_heads=4,
+    d_ff=1536,           # per-expert hidden size
+    vocab=151_936,
+    head_dim=64,
+    n_experts=128,
+    top_k=8,
+    n_shared_experts=0,
+    subquadratic=False,
+    source="hf:Qwen/Qwen3-30B-A3B",
+)

@@ -1,0 +1,30 @@
+"""Registry of all assigned architectures, selectable by ``--arch <id>``."""
+from __future__ import annotations
+
+from typing import Dict
+
+from repro.configs.base import ArchConfig
+from repro.configs import (llama3_2_1b, minitron_8b, yi_9b, phi3_mini,
+                           zamba2_1p2b, moonshot_16b, qwen3_moe_235b,
+                           whisper_base, llama3_2_vision_90b, xlstm_1p3b)
+
+ARCHS: Dict[str, ArchConfig] = {
+    c.name: c for c in (
+        llama3_2_1b.CONFIG,
+        minitron_8b.CONFIG,
+        yi_9b.CONFIG,
+        phi3_mini.CONFIG,
+        zamba2_1p2b.CONFIG,
+        moonshot_16b.CONFIG,
+        qwen3_moe_235b.CONFIG,
+        whisper_base.CONFIG,
+        llama3_2_vision_90b.CONFIG,
+        xlstm_1p3b.CONFIG,
+    )
+}
+
+
+def get_arch(name: str) -> ArchConfig:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; choices: {sorted(ARCHS)}")
+    return ARCHS[name]

@@ -1,0 +1,8 @@
+"""INFaaS core: the paper's contribution (model-less abstraction, variant
+selection, two-level autoscaling, multi-tenant sharing)."""
+from repro.core.api import INFaaS                      # noqa: F401
+from repro.core.master import Master, MasterConfig     # noqa: F401
+from repro.core.metadata import MetadataStore          # noqa: F401
+from repro.core.repository import ModelRepository      # noqa: F401
+from repro.core.selection import VariantSelector       # noqa: F401
+from repro.core.worker import Query, Worker, WorkerConfig  # noqa: F401

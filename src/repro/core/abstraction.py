@@ -1,0 +1,110 @@
+"""The model-less abstraction (paper §3.2, Fig. 7).
+
+Three-level registry: (task, dataset) -> model architecture -> model-variant.
+A variant binds an architecture to one hardware platform, an optimization
+batch size, and a numeric format; variants of the same architecture share
+accuracy, and differ in latency/memory/cost.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class VariantProfile:
+    """One-time profiling output (paper §4, Fig. 8): linear latency model
+    t(b) = m*b + c, load latency, and peak memory."""
+    m: float                  # seconds per additional batch element
+    c: float                  # seconds, intercept
+    load_latency: float       # seconds to load onto the target hardware
+    peak_memory: float        # bytes (weights + max activation buffers)
+    max_batch: int
+    peak_qps: float           # saturation throughput (queries/s, batch-weighted)
+
+    def latency(self, batch: int) -> float:
+        return self.m * batch + self.c
+
+
+@dataclasses.dataclass(frozen=True)
+class Variant:
+    name: str
+    arch: str
+    hardware: str             # key into sim.hardware.HARDWARE
+    framework: str            # "jax-bf16" | "jax-int8" | "jax-f32-cpu" | ...
+    batch_opt: int            # batch size this variant was compiled for
+    profile: VariantProfile
+    accuracy: float
+
+    @property
+    def is_accel(self) -> bool:
+        return self.hardware != "cpu-host"
+
+
+@dataclasses.dataclass
+class ModelArchInfo:
+    name: str
+    task: str
+    dataset: str
+    accuracy: float
+    submitter: str = "public"
+    is_private: bool = False
+    allowed_users: Tuple[str, ...] = ()
+    variants: List[str] = dataclasses.field(default_factory=list)
+
+    def accessible_by(self, user: str) -> bool:
+        if not self.is_private:
+            return True
+        return user == self.submitter or user in self.allowed_users
+
+
+class Registry:
+    """Static model metadata, stored inside the metadata store."""
+
+    def __init__(self):
+        self.archs: Dict[str, ModelArchInfo] = {}
+        self.variants: Dict[str, Variant] = {}
+
+    # -- registration -----------------------------------------------------
+    def add_arch(self, info: ModelArchInfo) -> None:
+        self.archs[info.name] = info
+
+    def add_variant(self, v: Variant) -> None:
+        self.variants[v.name] = v
+        arch = self.archs[v.arch]
+        if v.name not in arch.variants:
+            arch.variants.append(v.name)
+
+    # -- the three lookup granularities ------------------------------------
+    def variants_of(self, arch: str) -> List[Variant]:
+        return [self.variants[n] for n in self.archs[arch].variants]
+
+    def archs_for_usecase(self, task: str, dataset: str,
+                          min_accuracy: float = 0.0,
+                          user: str = "public") -> List[ModelArchInfo]:
+        return [a for a in self.archs.values()
+                if a.task == task and a.dataset == dataset
+                and a.accuracy >= min_accuracy and a.accessible_by(user)]
+
+    def top_variants_for_usecase(self, task: str, dataset: str,
+                                 min_accuracy: float, n: int = 7,
+                                 user: str = "public") -> List[Variant]:
+        """Top-N variants meeting the accuracy bar (paper §5: N defaults to
+        7 = avg variants/arch). Ranked by batch-1 latency, but diversified:
+        the best variant per (hardware, framework) group comes first, so the
+        candidate set spans hardware platforms as the paper intends."""
+        cands: List[Variant] = []
+        for a in self.archs_for_usecase(task, dataset, min_accuracy, user):
+            cands.extend(self.variants_of(a.name))
+        cands.sort(key=lambda v: v.profile.latency(1))
+        seen_groups = set()
+        diverse: List[Variant] = []
+        rest: List[Variant] = []
+        for v in cands:
+            g = (v.hardware, v.framework)
+            if g not in seen_groups:
+                seen_groups.add(g)
+                diverse.append(v)
+            else:
+                rest.append(v)
+        return (diverse + rest)[:n]

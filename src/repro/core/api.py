@@ -1,0 +1,84 @@
+"""INFaaS user API (paper Table 1).
+
+Thin facade over the master implementing the four calls with the three
+query granularities of the model-less abstraction:
+
+    register_model(modelBinary/cfg, ..., submitter, isPrivate)
+    model_info(task, dataset, accuracy)
+    online_query(inputs, modVar | modArch+latency | task+dataset+acc+latency)
+    offline_query(inputPath, outputPath, modVar | modArch | use-case)
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional
+
+from repro.configs.base import ArchConfig
+from repro.core.master import Master
+from repro.core.worker import OfflineJob, Query
+
+
+class INFaaS:
+    def __init__(self, master: Master):
+        self.master = master
+
+    # ------------------------------------------------------------------
+    def register_model(self, model_cfg: ArchConfig, *, submitter: str,
+                       is_private: bool = False,
+                       accuracy: Optional[float] = None) -> Dict[str, Any]:
+        n = self.master.register_model(model_cfg, submitter=submitter,
+                                       is_private=is_private,
+                                       accuracy=accuracy)
+        return {"status": "ok", "arch": model_cfg.name, "num_variants": n}
+
+    # ------------------------------------------------------------------
+    def model_info(self, *, task: Optional[str] = None,
+                   dataset: Optional[str] = None, accuracy: float = 0.0,
+                   submitter: str = "public") -> List[Dict[str, Any]]:
+        reg = self.master.store.registry
+        out = []
+        for a in reg.archs.values():
+            if task and a.task != task:
+                continue
+            if dataset and a.dataset != dataset:
+                continue
+            if a.accuracy < accuracy or not a.accessible_by(submitter):
+                continue
+            out.append({
+                "arch": a.name, "task": a.task, "dataset": a.dataset,
+                "accuracy": a.accuracy,
+                "variants": [
+                    {"name": v.name, "hardware": v.hardware,
+                     "batch": v.batch_opt,
+                     "latency_b1_ms": v.profile.latency(1) * 1e3,
+                     "load_ms": v.profile.load_latency * 1e3,
+                     "mem_mb": v.profile.peak_memory / 2**20}
+                    for v in reg.variants_of(a.name)],
+            })
+        return out
+
+    # ------------------------------------------------------------------
+    def online_query(self, *, submitter: str = "public", n_inputs: int = 1,
+                     mod_var: Optional[str] = None,
+                     mod_arch: Optional[str] = None,
+                     task: Optional[str] = None,
+                     dataset: Optional[str] = None,
+                     accuracy: float = 0.0,
+                     latency_ms: Optional[float] = None,
+                     done_cb=None) -> Query:
+        slo = latency_ms / 1e3 if latency_ms is not None else None
+        return self.master.online_query(
+            n_inputs=n_inputs, slo=slo, arch=mod_arch, variant=mod_var,
+            task=task, dataset=dataset, accuracy=accuracy, user=submitter,
+            done_cb=done_cb)
+
+    def offline_query(self, *, submitter: str = "public", n_inputs: int,
+                      mod_var: Optional[str] = None,
+                      mod_arch: Optional[str] = None,
+                      task: Optional[str] = None,
+                      dataset: Optional[str] = None, accuracy: float = 0.0,
+                      done_cb=None) -> OfflineJob:
+        # input/output object-store paths are validated by the real system;
+        # here n_inputs stands in for the staged input set.
+        return self.master.offline_query(
+            n_inputs=n_inputs, arch=mod_arch, variant=mod_var, task=task,
+            dataset=dataset, accuracy=accuracy, done_cb=done_cb)

@@ -1,0 +1,291 @@
+"""Master: front-end, dispatcher & load balancer, hedged-request straggler
+mitigation, and worker-lifecycle management (paper §4, Fig. 6).
+
+The master is logically centralized; its durable state lives in the metadata
+store (snapshot/restore covers master failure per paper §7). Decision latency
+of every selection is recorded for the overhead analysis (paper §8.6).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import time
+from typing import Callable, Dict, List, Optional, Tuple
+
+from repro.configs.base import ArchConfig
+from repro.core import profiler as prof
+from repro.core.abstraction import ModelArchInfo, Variant
+from repro.core.autoscaler import (MasterAutoscaler, MasterScaleConfig,
+                                   WorkerAutoscaler)
+from repro.core.metadata import MetadataStore
+from repro.core.repository import ModelRepository
+from repro.core.selection import Selection, VariantSelector
+from repro.core.worker import OfflineJob, Query, Worker, WorkerConfig
+from repro.sim import hardware as HW
+from repro.sim.clock import EventLoop
+
+
+@dataclasses.dataclass
+class MasterConfig:
+    worker: WorkerConfig = dataclasses.field(default_factory=WorkerConfig)
+    scale: MasterScaleConfig = dataclasses.field(
+        default_factory=MasterScaleConfig)
+    hedge_enabled: bool = False
+    hedge_factor: float = 3.0       # hedge when elapsed > factor * expected
+    retry_delay: float = 0.25
+    max_retries: int = 8
+    heartbeat_timeout: float = 6.0
+    # baseline-policy switches (paper §8.1): INDV = no variant upgrading;
+    # STATIC = no worker autoscaling at all (preloaded fixed replicas)
+    worker_autoscale: bool = True
+    allow_upgrade: bool = True
+
+
+class Master:
+    def __init__(self, store: MetadataStore, repo: ModelRepository,
+                 loop: EventLoop, cfg: MasterConfig = MasterConfig(),
+                 autoscale: bool = True):
+        self.store = store
+        self.repo = repo
+        self.loop = loop
+        self.cfg = cfg
+        self.selector = VariantSelector(store)
+        self.workers: Dict[str, Worker] = {}
+        self.metrics: List[Query] = []
+        self.offline_done: List[OfflineJob] = []
+        self.decision_log: List[Tuple[str, bool, float]] = []
+        self._qid = itertools.count()
+        self._jid = itertools.count()
+        self._worker_seq = itertools.count()
+        self.autoscaler = None
+        if autoscale:
+            self.autoscaler = MasterAutoscaler(
+                store, loop, self._start_worker_async, self._stop_worker,
+                cfg.scale)
+        loop.every(cfg.worker.monitor_period, self._failure_sweep)
+
+    # ------------------------------------------------------------------
+    # cluster membership (elastic scaling)
+    def add_worker(self, kind: str = "accel", name: Optional[str] = None,
+                   slowdown: float = 1.0) -> Worker:
+        hardware = ("cpu-host", "tpu-v5e-1") if kind == "accel" \
+            else ("cpu-host",)
+        name = name or f"worker-{kind}-{next(self._worker_seq)}"
+        w = Worker(name, hardware, self.store, self.repo, self.loop,
+                   self.cfg.worker, metrics=self.metrics, slowdown=slowdown)
+        if self.cfg.worker_autoscale:
+            WorkerAutoscaler(w, self.store, self._request_worker_load,
+                             allow_upgrade=self.cfg.allow_upgrade)
+        self.workers[name] = w
+        return w
+
+    def _start_worker_async(self, kind: str, done: Callable) -> None:
+        hw = HW.HARDWARE["tpu-v5e-1" if kind == "accel" else "cpu-host"]
+
+        def boot():
+            self.add_worker(kind)
+            done()
+        self.loop.schedule(hw.startup_latency, boot)
+
+    def _stop_worker(self, name: str) -> None:
+        w = self.workers.pop(name, None)
+        if w is not None:
+            w.alive = False
+            self.store.mark_dead(name)
+
+    def fail_worker(self, name: str) -> None:
+        """Failure injection entry point (tests/benchmarks)."""
+        w = self.workers.get(name)
+        if w is not None:
+            w.fail()
+
+    def _failure_sweep(self) -> None:
+        """Detect dead workers via missed heartbeats; re-route their load."""
+        now = self.loop.now()
+        for name, st in list(self.store.workers.items()):
+            if st.alive and now - st.heartbeat > self.cfg.heartbeat_timeout:
+                self.store.mark_dead(name)
+                w = self.workers.get(name)
+                if w is not None:
+                    w.alive = False
+
+    # ------------------------------------------------------------------
+    # registration (paper §3.1)
+    def register_model(self, cfg: ArchConfig, submitter: str = "public",
+                       is_private: bool = False,
+                       accuracy: Optional[float] = None) -> int:
+        task, dataset, acc = prof.ARCH_META.get(
+            cfg.name, ("text-generation", "openwebtext", 0.6))
+        # "verify the accuracy of a public model" — the submitted accuracy
+        # must match the profiler's validation run within tolerance.
+        if accuracy is not None and abs(accuracy - acc) > 0.05:
+            raise ValueError(
+                f"accuracy verification failed for {cfg.name}: "
+                f"submitted {accuracy}, validated {acc}")
+        self.store.registry.add_arch(ModelArchInfo(
+            name=cfg.name, task=task, dataset=dataset, accuracy=acc,
+            submitter=submitter, is_private=is_private))
+        n = 0
+        for v in prof.generate_variants(cfg):
+            self.store.registry.add_variant(v)
+            self.repo.put_size(
+                v.name, cfg.param_count() * prof.DTYPE_BYTES[
+                    v.framework.split("-")[-1]])
+            n += 1
+        return n
+
+    # ------------------------------------------------------------------
+    # query path (paper §3.3 life cycle)
+    def online_query(self, *, n_inputs: int = 1, slo: Optional[float] = None,
+                     arch: Optional[str] = None,
+                     variant: Optional[str] = None,
+                     task: Optional[str] = None, dataset: Optional[str] = None,
+                     accuracy: float = 0.0, user: str = "public",
+                     done_cb: Optional[Callable] = None) -> Query:
+        q = Query(qid=next(self._qid), kind="online", n_inputs=n_inputs,
+                  slo=slo, arrival=self.loop.now(), arch=arch or "",
+                  done_cb=done_cb)
+        t0 = time.perf_counter()
+        if variant is not None:
+            sel = self.selector.select_variant(variant, n_inputs)
+            mode = "modvar"
+        elif arch is not None:
+            sel = self.selector.select_arch(arch, n_inputs, slo)
+            mode = "modarch"
+        else:
+            sel = self.selector.select_usecase(task, dataset, accuracy,
+                                               n_inputs, slo, user)
+            mode = "usecase"
+        decision_us = (time.perf_counter() - t0) * 1e6
+        self.decision_log.append((mode, sel.needs_load, decision_us))
+        self._dispatch(q, sel, retries=0)
+        return q
+
+    def _dispatch(self, q: Query, sel: Selection, retries: int) -> None:
+        if sel.variant is None or sel.worker is None:
+            if retries < self.cfg.max_retries:
+                self.loop.schedule(
+                    self.cfg.retry_delay,
+                    lambda: self._redispatch(q, retries + 1))
+            else:
+                q.failed = True
+                q.finish = self.loop.now()
+                self.metrics.append(q)
+                if q.done_cb:
+                    q.done_cb(q)
+            return
+        q.variant = sel.variant.name
+        worker = self.workers.get(sel.worker)
+        if worker is None or not worker.alive:
+            self._redispatch(q, retries + 1)
+            return
+        if sel.needs_load and self.store.instance(
+                sel.variant.name, sel.worker) is None:
+            worker.load_variant(sel.variant)
+        orig_cb = q.done_cb
+
+        def on_done(qq: Query) -> None:
+            if qq.failed and retries < self.cfg.max_retries:
+                qq.failed = False
+                qq.done_cb = orig_cb
+                self._redispatch(qq, retries + 1)
+                return
+            if orig_cb:
+                orig_cb(qq)
+        q.done_cb = on_done
+        worker.enqueue(q, sel.variant.name)
+        if self.cfg.hedge_enabled and q.slo is not None:
+            self._arm_hedge(q, sel)
+
+    def _redispatch(self, q: Query, retries: int) -> None:
+        sel = (self.selector.select_arch(q.arch, q.n_inputs, q.slo)
+               if q.arch else
+               self.selector.select_variant(q.variant, q.n_inputs)
+               if q.variant else None)
+        if sel is None:
+            q.failed = True
+            if q.done_cb:
+                q.done_cb(q)
+            return
+        self._dispatch(q, sel, retries)
+
+    # -- hedged requests (straggler mitigation, DESIGN.md §6) -------------
+    def _arm_hedge(self, q: Query, sel: Selection) -> None:
+        v = sel.variant
+        expected = v.profile.latency(q.n_inputs) + (
+            v.profile.load_latency if sel.needs_load else 0.0)
+        trigger = self.cfg.hedge_factor * max(expected, 1e-3)
+
+        def check():
+            if q.finish >= 0 or q.failed or q.cancelled:
+                return
+            insts = [i for i in self.store.running_instances_of(v.name)
+                     if i.worker != sel.worker]
+            if not insts:
+                return
+            backup = min(insts, key=lambda i: i.qps)
+            dup = Query(qid=next(self._qid), kind="online",
+                        n_inputs=q.n_inputs, slo=q.slo, arrival=q.arrival,
+                        arch=q.arch, hedge_of=q.qid)
+
+            def first_wins(winner: Query) -> None:
+                if q.finish >= 0:
+                    return            # original already answered
+                q.finish = winner.finish
+                q.start = winner.start
+                q.variant = winner.variant
+                q.worker = winner.worker
+                q.violated = winner.violated
+                q.cancelled = False
+                if q.done_cb:
+                    q.done_cb(q)
+            dup.done_cb = first_wins
+            w = self.workers.get(backup.worker)
+            if w is not None:
+                w.enqueue(dup, v.name)
+        self.loop.schedule(trigger, check)
+
+    # ------------------------------------------------------------------
+    # offline queries (paper §3.2: best-effort, no latency option)
+    def offline_query(self, *, n_inputs: int, arch: Optional[str] = None,
+                      variant: Optional[str] = None,
+                      task: Optional[str] = None,
+                      dataset: Optional[str] = None, accuracy: float = 0.0,
+                      done_cb: Optional[Callable] = None) -> OfflineJob:
+        if variant is not None:
+            sel = self.selector.select_variant(variant, 1)
+        elif arch is not None:
+            sel = self.selector.select_arch(arch, 1, None)
+        else:
+            sel = self.selector.select_usecase(task, dataset, accuracy, 1,
+                                               None)
+        job = OfflineJob(jid=next(self._jid), variant="",
+                         total_inputs=n_inputs)
+
+        def record(j: OfflineJob) -> None:
+            self.offline_done.append(j)
+            if done_cb:
+                done_cb(j)
+        job.done_cb = record
+        if sel.variant is None or sel.worker is None:
+            return job   # nothing can serve it yet; caller may retry
+        job.variant = sel.variant.name
+        worker = self.workers.get(sel.worker)
+        if worker is None:
+            return job
+        if sel.needs_load and self.store.instance(
+                sel.variant.name, sel.worker) is None:
+            worker.load_variant(sel.variant)
+        worker.submit_offline(job)
+        return job
+
+    # ------------------------------------------------------------------
+    # worker-initiated placements (upgrade to hardware the worker lacks)
+    def _request_worker_load(self, variant: Variant, origin: str) -> None:
+        sel_worker = self.selector._worker_for_load(variant)
+        if sel_worker is None:
+            return
+        w = self.workers.get(sel_worker)
+        if w is not None and self.store.instance(
+                variant.name, sel_worker) is None:
+            w.load_variant(variant)

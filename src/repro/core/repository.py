@@ -1,0 +1,54 @@
+"""Model repository (paper §4): persistent store for model-variant binaries.
+
+In this repo a "binary" is either (a) a byte-size record for simulated
+variants (load latency derives from bytes / load bandwidth), or (b) an actual
+parameter pytree persisted through ``repro.distributed.checkpoint`` for real
+execution on host. Workers restore from here when a variant must be loaded —
+the same code path as training checkpoint-restore (fault tolerance)."""
+from __future__ import annotations
+
+import os
+from typing import Any, Dict, Optional
+
+from repro.sim import hardware as HW
+
+
+class ModelRepository:
+    def __init__(self, root: Optional[str] = None):
+        self._sizes: Dict[str, float] = {}
+        self._blobs: Dict[str, Any] = {}
+        self.root = root
+        if root:
+            os.makedirs(root, exist_ok=True)
+
+    # -- simulated binaries -------------------------------------------------
+    def put_size(self, name: str, num_bytes: float) -> None:
+        self._sizes[name] = float(num_bytes)
+
+    def size(self, name: str) -> float:
+        return self._sizes.get(name, 0.0)
+
+    def load_latency(self, name: str, hardware: str) -> float:
+        hw = HW.HARDWARE[hardware]
+        base = 0.5 if hw.kind == "cpu" else 1.0
+        return base + self.size(name) / hw.load_bw
+
+    # -- real parameter pytrees ----------------------------------------------
+    def put_params(self, name: str, params: Any) -> None:
+        self._blobs[name] = params
+        if self.root is not None:
+            from repro.distributed import checkpoint as ckpt
+            ckpt.save_pytree(os.path.join(self.root, name.replace("/", "_")),
+                             params)
+
+    def get_params(self, name: str) -> Any:
+        if name in self._blobs:
+            return self._blobs[name]
+        if self.root is not None:
+            from repro.distributed import checkpoint as ckpt
+            return ckpt.load_pytree(
+                os.path.join(self.root, name.replace("/", "_")))
+        raise KeyError(name)
+
+    def has(self, name: str) -> bool:
+        return name in self._blobs or name in self._sizes

@@ -1,0 +1,387 @@
+"""Worker: executors, per-variant queues with adaptive batching, monitoring
+daemon, and offline best-effort execution (paper §4, §6.2, §8.3).
+
+Execution model (DESIGN.md §2): an accelerator device is a single temporal-
+sharing resource (one job in service, FIFO across co-resident variants; no
+replication on-accelerator, per paper §6.2); the host CPU offers
+``cores // cores_per_replica`` concurrent slots and variants scale on it by
+replication. Service time of a batch of size b is the variant's profiled
+t(b) = m*b + c (sim executor) or a real jitted step (Jax executor).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Any, Callable, Deque, Dict, List, Optional
+
+from repro.core.metadata import InstanceState, MetadataStore
+from repro.core.repository import ModelRepository
+from repro.sim import hardware as HW
+from repro.sim.clock import EventLoop
+
+
+@dataclasses.dataclass
+class Query:
+    qid: int
+    kind: str                       # "online" | "offline"
+    n_inputs: int
+    slo: Optional[float]
+    arrival: float
+    arch: str = ""
+    variant: str = ""
+    worker: str = ""
+    start: float = -1.0
+    finish: float = -1.0
+    violated: bool = False
+    failed: bool = False
+    cancelled: bool = False         # hedging: the losing copy is cancelled
+    hedge_of: Optional[int] = None
+    done_cb: Optional[Callable[["Query"], None]] = None
+
+    @property
+    def latency(self) -> float:
+        return self.finish - self.arrival
+
+
+@dataclasses.dataclass
+class OfflineJob:
+    jid: int
+    variant: str
+    total_inputs: int
+    processed: int = 0
+    done_cb: Optional[Callable[["OfflineJob"], None]] = None
+
+    @property
+    def done(self) -> bool:
+        return self.processed >= self.total_inputs
+
+
+@dataclasses.dataclass
+class WorkerConfig:
+    monitor_period: float = 2.0
+    autoscale_period: float = 1.0
+    headroom: float = 0.05          # absorb 5% spikes (paper §6.2)
+    t_down_cpu: int = 10            # scale-down hysteresis (paper §6.2)
+    t_down_accel: int = 20
+    cpu_cores: int = 8
+    cores_per_replica: int = 2
+    qps_window: float = 4.0         # EWMA window for rate estimates
+    offline_util_cap: float = 0.9   # pause offline above this CPU util
+
+
+class _Device:
+    def __init__(self, hw: HW.HardwareSpec, slots: int):
+        self.hw = hw
+        self.slots = slots
+        self.active = 0
+        self.mem_used = 0.0
+        self.busy_accum = 0.0       # busy seconds since last monitor tick
+        self.waiting: Deque = deque()
+
+    @property
+    def idle(self) -> bool:
+        return self.active == 0 and not self.waiting
+
+
+class _Job:
+    __slots__ = ("instance", "queries", "batch", "offline_job", "duration")
+
+    def __init__(self, instance, queries, batch, offline_job=None):
+        self.instance = instance
+        self.queries = queries
+        self.batch = batch
+        self.offline_job = offline_job
+        self.duration = 0.0
+
+
+class _LocalInstance:
+    """Worker-local execution state of one variant instance."""
+
+    def __init__(self, variant, replicas: int = 1):
+        self.variant = variant      # abstraction.Variant
+        self.replicas = replicas
+        self.outstanding = 0
+        self.pending: Deque[Query] = deque()
+        # stats since last monitor tick
+        self.completed_inputs = 0.0
+        self.lat_sum = 0.0
+        self.lat_n = 0
+        self.running = False
+
+
+class Worker:
+    def __init__(self, name: str, hardware, store: MetadataStore,
+                 repo: ModelRepository, loop: EventLoop,
+                 cfg: WorkerConfig = WorkerConfig(),
+                 metrics: Optional[List[Query]] = None,
+                 service_time_fn: Optional[Callable] = None,
+                 slowdown: float = 1.0):
+        self.name = name
+        self.hardware = tuple(hardware)
+        self.store = store
+        self.repo = repo
+        self.loop = loop
+        self.cfg = cfg
+        self.metrics = metrics if metrics is not None else []
+        self.alive = True
+        self.slowdown = slowdown    # straggler injection (>1 = slow worker)
+        self.instances: Dict[str, _LocalInstance] = {}
+        self.offline_jobs: List[OfflineJob] = []
+        self.recent_violations = 0
+        self._service_time_fn = service_time_fn
+        self.devices: Dict[str, _Device] = {}
+        for hname in self.hardware:
+            hw = HW.HARDWARE[hname]
+            slots = 1 if hw.kind == "accel" else max(
+                1, cfg.cpu_cores // cfg.cores_per_replica)
+            self.devices[hname] = _Device(hw, slots)
+        store.upsert_worker(name, self.hardware, loop.now())
+        store.heartbeat(name, {h: 0.0 for h in self.hardware},
+                        {h: 0.0 for h in self.hardware}, loop.now())
+        loop.every(cfg.monitor_period, self.monitor_tick,
+                   stop=lambda: not self.alive)
+
+    # ------------------------------------------------------------------
+    # variant lifecycle
+    def load_variant(self, variant, on_ready: Optional[Callable] = None,
+                     replicas: int = 1) -> bool:
+        """Start loading a variant; becomes running after its load latency."""
+        dev = self.devices.get(variant.hardware)
+        if dev is None:
+            return False   # this worker lacks the target hardware
+        mem = variant.profile.peak_memory
+        if dev.mem_used + mem > dev.hw.mem_capacity:
+            return False
+        if variant.name in self.instances:
+            return True
+        dev.mem_used += mem
+        li = _LocalInstance(variant, replicas)
+        self.instances[variant.name] = li
+        inst = InstanceState(variant=variant.name, worker=self.name,
+                            replicas=replicas, running=False, loading=True)
+        self.store.set_instance(inst)
+
+        def ready():
+            if not self.alive or variant.name not in self.instances:
+                return
+            li.running = True
+            st = self.store.instance(variant.name, self.name)
+            if st is not None:
+                st.loading = False
+                st.running = True
+            self._try_dispatch(variant.name)
+            self._pump_offline()
+            if on_ready:
+                on_ready()
+
+        self.loop.schedule(variant.profile.load_latency * self.slowdown,
+                           ready)
+        return True
+
+    def unload_variant(self, vname: str) -> None:
+        li = self.instances.pop(vname, None)
+        if li is None:
+            return
+        dev = self.devices[li.variant.hardware]
+        dev.mem_used -= li.variant.profile.peak_memory
+        self.store.drop_instance(vname, self.name)
+        for q in li.pending:   # re-dispatch responsibility is the master's
+            q.failed = True
+            if q.done_cb:
+                q.done_cb(q)
+
+    def set_replicas(self, vname: str, replicas: int) -> None:
+        li = self.instances.get(vname)
+        if li is None:
+            return
+        li.replicas = max(1, replicas)
+        st = self.store.instance(vname, self.name)
+        if st is not None:
+            st.replicas = li.replicas
+        self._try_dispatch(vname)
+
+    # ------------------------------------------------------------------
+    # query path
+    def enqueue(self, q: Query, vname: str) -> None:
+        if not self.alive:
+            q.failed = True
+            if q.done_cb:
+                q.done_cb(q)
+            return
+        li = self.instances.get(vname)
+        if li is None:
+            q.failed = True
+            if q.done_cb:
+                q.done_cb(q)
+            return
+        q.worker = self.name
+        li.pending.append(q)
+        if li.running:
+            self._try_dispatch(vname)
+
+    def _concurrency(self, li: _LocalInstance) -> int:
+        hw = HW.HARDWARE[li.variant.hardware]
+        return 1 if hw.kind == "accel" else li.replicas
+
+    def _service_time(self, li: _LocalInstance, batch: int) -> float:
+        if self._service_time_fn is not None:
+            t = self._service_time_fn(li.variant, batch)
+        else:
+            t = li.variant.profile.latency(batch)
+        return t * self.slowdown
+
+    def _try_dispatch(self, vname: str) -> None:
+        li = self.instances.get(vname)
+        if li is None or not li.running:
+            return
+        dev = self.devices[li.variant.hardware]
+        while li.pending and li.outstanding < self._concurrency(li):
+            # adaptive batching: drain up to the variant's max batch
+            queries: List[Query] = []
+            batch = 0
+            while li.pending and batch < li.variant.profile.max_batch:
+                nxt = li.pending[0]
+                if nxt.cancelled:
+                    li.pending.popleft()
+                    continue
+                if batch + nxt.n_inputs > li.variant.profile.max_batch \
+                        and queries:
+                    break
+                q = li.pending.popleft()
+                queries.append(q)
+                batch += q.n_inputs
+            if not queries:
+                return
+            job = _Job(li, queries, batch)
+            li.outstanding += 1
+            self._submit(dev, job)
+
+    def _submit(self, dev: _Device, job: _Job) -> None:
+        job.duration = self._service_time(job.instance, job.batch)
+        if dev.active < dev.slots:
+            self._start(dev, job)
+        else:
+            dev.waiting.append(job)
+
+    def _start(self, dev: _Device, job: _Job) -> None:
+        dev.active += 1
+        now = self.loop.now()
+        for q in job.queries:
+            if q.start < 0:
+                q.start = now
+        self.loop.schedule(job.duration, lambda: self._complete(dev, job))
+
+    def _complete(self, dev: _Device, job: _Job) -> None:
+        if not self.alive:
+            # worker died mid-flight: surface the failure to the master
+            for q in job.queries:
+                q.failed = True
+                if q.done_cb:
+                    q.done_cb(q)
+            return
+        dev.active -= 1
+        dev.busy_accum += job.duration
+        now = self.loop.now()
+        li = job.instance
+        if job.offline_job is None:
+            li.outstanding -= 1
+            for q in job.queries:
+                q.finish = now
+                q.variant = li.variant.name
+                if q.slo is not None and q.latency > q.slo:
+                    q.violated = True
+                    self.recent_violations += 1
+                li.completed_inputs += q.n_inputs
+                li.lat_sum += q.latency
+                li.lat_n += 1
+                self.metrics.append(q)
+                if q.done_cb:
+                    q.done_cb(q)
+        else:
+            job.offline_job.processed += job.batch
+            li.completed_inputs += job.batch
+            if job.offline_job.done and job.offline_job.done_cb:
+                job.offline_job.done_cb(job.offline_job)
+        # drain device queue, then instance queues, then offline slack
+        if dev.waiting and dev.active < dev.slots:
+            self._start(dev, dev.waiting.popleft())
+        if self.alive:
+            if job.offline_job is None:
+                self._try_dispatch(li.variant.name)
+            self._pump_offline()
+
+    # ------------------------------------------------------------------
+    # offline best-effort (paper §8.3, Fig. 10)
+    def submit_offline(self, job: OfflineJob) -> None:
+        self.offline_jobs.append(job)
+        self._pump_offline()
+
+    def _offline_throttled(self) -> bool:
+        if self.recent_violations > 0:
+            return True
+        cpu = self.devices.get("cpu-host")
+        if cpu is not None:
+            # crude live-util probe: all slots busy -> back off
+            if cpu.active >= cpu.slots:
+                return True
+        return False
+
+    def _pump_offline(self) -> None:
+        if not self.alive or self._offline_throttled():
+            return
+        for job in list(self.offline_jobs):
+            if job.done:
+                self.offline_jobs.remove(job)
+                continue
+            li = self.instances.get(job.variant)
+            if li is None or not li.running:
+                continue
+            dev = self.devices[li.variant.hardware]
+            # only absorb slack: device must be idle and no online backlog
+            if not dev.idle or li.pending:
+                continue
+            chunk = min(job.total_inputs - job.processed,
+                        li.variant.profile.max_batch)
+            j = _Job(li, [], chunk, offline_job=job)
+            self._submit(dev, j)
+
+    # ------------------------------------------------------------------
+    # monitoring daemon (2 s updates, paper §4/§7)
+    def monitor_tick(self) -> None:
+        if not self.alive:
+            return
+        now = self.loop.now()
+        window = self.cfg.monitor_period
+        util, mem = {}, {}
+        for hname, dev in self.devices.items():
+            busy = dev.busy_accum + dev.active * 0.0
+            util[hname] = min(1.0, busy / (window * dev.slots))
+            mem[hname] = dev.mem_used
+            dev.busy_accum = 0.0
+        self.store.heartbeat(self.name, util, mem, now)
+        for vname, li in self.instances.items():
+            st = self.store.instance(vname, self.name)
+            if st is None:
+                continue
+            qps = li.completed_inputs / window
+            st.qps = 0.5 * st.qps + 0.5 * qps
+            if li.lat_n:
+                st.avg_latency = li.lat_sum / li.lat_n
+            st.replicas = li.replicas
+            st.running = li.running
+            li.completed_inputs = 0.0
+            li.lat_sum, li.lat_n = 0.0, 0
+        self.recent_violations = 0
+        self._pump_offline()   # periodic re-probe for slack
+
+    # ------------------------------------------------------------------
+    # failure injection (fault-tolerance tests)
+    def fail(self) -> None:
+        self.alive = False
+        self.store.mark_dead(self.name)
+        for li in self.instances.values():
+            for q in li.pending:
+                q.failed = True
+                if q.done_cb:
+                    q.done_cb(q)
+            li.pending.clear()

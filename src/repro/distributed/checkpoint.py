@@ -1,0 +1,121 @@
+"""Checkpointing: atomic, content-hashed pytree save/restore.
+
+Used by (a) the training loop for checkpoint/restart fault tolerance, and
+(b) the model repository — loading a serving variant is the same restore
+path. Arrays are stored in an .npz plus a JSON manifest carrying the tree
+structure and SHA-256 content hashes; writes are atomic (tmp + rename) so a
+crash mid-write never corrupts the latest checkpoint.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import shutil
+import tempfile
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree: Any) -> List[Tuple[str, np.ndarray]]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        out.append((key, np.asarray(leaf)))
+    return out
+
+
+def save_pytree(path: str, tree: Any) -> Dict[str, str]:
+    """Atomic save. Returns {leaf_path: sha256}."""
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    leaves = _flatten_with_paths(tree)
+    hashes = {k: hashlib.sha256(v.tobytes()).hexdigest() for k, v in leaves}
+    treedef = jax.tree_util.tree_structure(tree)
+    manifest = {
+        "treedef": str(treedef),
+        "leaves": [{"key": k, "shape": list(v.shape), "dtype": str(v.dtype),
+                    "sha256": hashes[k]} for k, v in leaves],
+    }
+    tmpdir = tempfile.mkdtemp(dir=os.path.dirname(path) or ".")
+    try:
+        np.savez(os.path.join(tmpdir, "arrays.npz"),
+                 **{k: v for k, v in leaves})
+        with open(os.path.join(tmpdir, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.isdir(path):
+            shutil.rmtree(path)
+        os.replace(tmpdir, path)
+    except BaseException:
+        shutil.rmtree(tmpdir, ignore_errors=True)
+        raise
+    return hashes
+
+
+def load_pytree(path: str, like: Optional[Any] = None,
+                verify: bool = True) -> Any:
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(path, "arrays.npz"))
+    leaves = []
+    for entry in manifest["leaves"]:
+        arr = data[entry["key"]]
+        if verify:
+            h = hashlib.sha256(arr.tobytes()).hexdigest()
+            if h != entry["sha256"]:
+                raise IOError(
+                    f"checkpoint corruption in {path}: leaf {entry['key']}")
+        leaves.append(arr)
+    if like is not None:
+        treedef = jax.tree_util.tree_structure(like)
+        return jax.tree_util.tree_unflatten(treedef, leaves)
+    # rebuild as nested dict from the flat keys
+    out: Dict[str, Any] = {}
+    for entry, arr in zip(manifest["leaves"], leaves):
+        node = out
+        parts = entry["key"].split("/")
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = arr
+    return out
+
+
+class CheckpointManager:
+    """Step-indexed checkpoints with retention; restores the latest intact
+    checkpoint after a crash (restart path of the train loop)."""
+
+    def __init__(self, root: str, keep: int = 3):
+        self.root = root
+        self.keep = keep
+        os.makedirs(root, exist_ok=True)
+
+    def _dir(self, step: int) -> str:
+        return os.path.join(self.root, f"step_{step:09d}")
+
+    def save(self, step: int, tree: Any) -> None:
+        save_pytree(self._dir(step), tree)
+        steps = self.all_steps()
+        for s in steps[:-self.keep]:
+            shutil.rmtree(self._dir(s), ignore_errors=True)
+
+    def all_steps(self) -> List[int]:
+        out = []
+        for name in os.listdir(self.root):
+            if name.startswith("step_"):
+                if os.path.exists(os.path.join(self.root, name,
+                                               "manifest.json")):
+                    out.append(int(name.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, like: Any, step: Optional[int] = None) -> Tuple[int, Any]:
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {self.root}")
+        return step, load_pytree(self._dir(step), like=like)

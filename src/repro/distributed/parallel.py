@@ -1,0 +1,65 @@
+"""Parallelism context passed to model builders, plus the activation-
+sharding hint consulted by the layer library (contextvar so host-side tests
+and single-device runs are unaffected)."""
+from __future__ import annotations
+
+import contextvars
+import dataclasses
+from typing import Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class ParallelConfig:
+    mesh: object                     # jax.sharding.Mesh
+    data_axes: Tuple[str, ...]       # ("pod", "data") or ("data",)
+    model_axis: str = "model"
+    moe_impl: str = "ep"             # "ep" (shard_map all_to_all) | "dense"
+
+    @property
+    def data_size(self) -> int:
+        return int(
+            __import__("numpy").prod([self.mesh.shape[a]
+                                      for a in self.data_axes]))
+
+    @property
+    def model_size(self) -> int:
+        return int(self.mesh.shape[self.model_axis])
+
+
+@dataclasses.dataclass(frozen=True)
+class ActivationSharding:
+    """Hints for with_sharding_constraint inside layer code: batch dims on
+    the data axes, sequence dim on the model axis (sequence parallelism for
+    the remat-saved residual stream). Carries the mesh so layer code can
+    open shard_map regions (flash-decode split-K)."""
+    data_axes: Tuple[str, ...]
+    model_axis: str
+    data_size: int
+    model_size: int
+    mesh: object = None
+
+    def batch(self, n: int):
+        return self.data_axes if n % self.data_size == 0 else None
+
+    def seq(self, n: int):
+        return self.model_axis if (n > 1 and n % self.model_size == 0) \
+            else None
+
+
+_ACT_CTX: contextvars.ContextVar[Optional[ActivationSharding]] = \
+    contextvars.ContextVar("repro_activation_sharding", default=None)
+
+
+def set_activation_sharding(ctx: Optional[ActivationSharding]):
+    return _ACT_CTX.set(ctx)
+
+
+def get_activation_sharding() -> Optional[ActivationSharding]:
+    return _ACT_CTX.get()
+
+
+def activation_sharding_from(parallel: "ParallelConfig") -> ActivationSharding:
+    return ActivationSharding(
+        data_axes=parallel.data_axes, model_axis=parallel.model_axis,
+        data_size=parallel.data_size, model_size=parallel.model_size,
+        mesh=parallel.mesh)

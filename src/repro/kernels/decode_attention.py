@@ -1,0 +1,109 @@
+"""Flash-decode (split-K) GQA attention for one-token serving, Pallas TPU.
+
+One query token attends to a long KV cache. Grid = (B, K, n_t_blocks): the KV
+sequence is tiled; each step computes a partial online-softmax update for all
+G query heads sharing the KV head, with running (m, l, acc) in VMEM scratch.
+This is the TPU analogue of FlashDecoding's split-K: HBM traffic is exactly
+one pass over the KV cache, the dominant term for decode at 32k-524k context.
+
+The G dimension (q heads per KV head) rides inside the block as the row dim
+of a (G, block_t) score matrix, so the MXU sees (G x D) @ (D x block_t).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_T = 512
+NEG_INF = -1e30
+
+
+def _decode_kernel(vlen_ref, q_ref, k_ref, v_ref, o_ref,
+                   m_scr, l_scr, acc_scr, *,
+                   block_t: int, n_t_blocks: int, sm_scale: float):
+    tj = pl.program_id(2)
+
+    @pl.when(tj == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    t_start = tj * block_t
+    valid_len = vlen_ref[0]
+
+    @pl.when(t_start < valid_len)
+    def _step():
+        q = q_ref[0, 0].astype(jnp.float32)          # (G, D)
+        k = k_ref[0, 0].astype(jnp.float32)          # (bt, D)
+        v = v_ref[0, 0].astype(jnp.float32)          # (bt, D)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * sm_scale
+        t_idx = t_start + lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(t_idx < valid_len, s, NEG_INF)  # (G, bt)
+        m_prev = m_scr[...]                          # (G, 1)
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jnp.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(tj == n_t_blocks - 1)
+    def _finish():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "interpret"))
+def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     valid_len: Optional[jax.Array] = None, *,
+                     block_t: int = DEFAULT_BLOCK_T,
+                     interpret: bool = False) -> jax.Array:
+    """q: (B, K, G, D); k/v: (B, K, T, D); valid_len scalar (<= T).
+
+    Returns (B, K, G, D).
+    """
+    B, K, G, D = q.shape
+    T = k.shape[2]
+    block_t = min(block_t, T)
+    assert T % block_t == 0, (T, block_t)
+    nt = T // block_t
+    if valid_len is None:
+        valid_len = jnp.array([T], jnp.int32)
+    else:
+        valid_len = jnp.asarray(valid_len, jnp.int32).reshape(1)
+
+    kernel = functools.partial(_decode_kernel, block_t=block_t,
+                               n_t_blocks=nt, sm_scale=D ** -0.5)
+    grid = (B, K, nt)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, G, D), lambda b, h, j, vlen: (b, h, 0, 0)),
+                pl.BlockSpec((1, 1, block_t, D),
+                             lambda b, h, j, vlen: (b, h, j, 0)),
+                pl.BlockSpec((1, 1, block_t, D),
+                             lambda b, h, j, vlen: (b, h, j, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, G, D),
+                                   lambda b, h, j, vlen: (b, h, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((G, 1), jnp.float32),
+                pltpu.VMEM((G, 1), jnp.float32),
+                pltpu.VMEM((G, D), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, K, G, D), q.dtype),
+        interpret=interpret,
+    )(valid_len, q, k, v)

@@ -1,0 +1,129 @@
+"""Causal GQA flash attention (prefill/train), Pallas TPU.
+
+Online-softmax over KV blocks. Grid = (B, H, n_q_blocks, n_kv_blocks) with
+the KV dimension innermost: the output block (block_q, D) is revisited across
+KV steps, and running (m, l, acc) live in VMEM scratch. Block dims default to
+(128, 128) — MXU-aligned. GQA is handled by the K/V index maps (kv head =
+q head // group size), so KV is never repeated in memory.
+
+VMEM working set per step (defaults, D=128, f32 scratch):
+  q (128x128 bf16) + k,v (128x128 bf16 each) + acc/m/l f32 ~ 0.2 MB << 16 MB.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+NEG_INF = -1e30
+
+
+def _flash_kernel(vlen_ref, q_ref, k_ref, v_ref, o_ref,
+                  m_scr, l_scr, acc_scr, *,
+                  causal: bool, q_offset: int, block_q: int, block_k: int,
+                  n_kv_blocks: int, sm_scale: float):
+    qi = pl.program_id(2)
+    kj = pl.program_id(3)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = qi * block_q + q_offset
+    k_start = kj * block_k
+    valid_len = vlen_ref[0]
+
+    # block-level skip: strictly above the causal diagonal or fully invalid
+    run = k_start < valid_len
+    if causal:
+        run = jnp.logical_and(run, k_start <= q_start + block_q - 1)
+
+    @pl.when(run)
+    def _step():
+        q = q_ref[0, 0].astype(jnp.float32)          # (bq, D)
+        k = k_ref[0, 0].astype(jnp.float32)          # (bk, D)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * sm_scale
+        t_idx = k_start + lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        mask = t_idx < valid_len
+        if causal:
+            s_idx = q_start + lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 0)
+            mask = jnp.logical_and(mask, t_idx <= s_idx)
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_scr[...]                          # (bq, 1)
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jnp.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(kj == n_kv_blocks - 1)
+    def _finish():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "q_offset", "block_q", "block_k", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    valid_len: Optional[jax.Array] = None, *,
+                    causal: bool = True, q_offset: int = 0,
+                    block_q: int = DEFAULT_BLOCK_Q,
+                    block_k: int = DEFAULT_BLOCK_K,
+                    interpret: bool = False) -> jax.Array:
+    """q: (B, H, S, D); k/v: (B, K, T, D), H = K*G. Returns (B, H, S, D)."""
+    B, H, S, D = q.shape
+    _, K, T, _ = k.shape
+    G = H // K
+    block_q = min(block_q, S)
+    block_k = min(block_k, T)
+    assert S % block_q == 0 and T % block_k == 0, (S, T, block_q, block_k)
+    nq, nk = S // block_q, T // block_k
+    if valid_len is None:
+        valid_len = jnp.array([T], jnp.int32)
+    else:
+        valid_len = jnp.asarray(valid_len, jnp.int32).reshape(1)
+
+    kernel = functools.partial(
+        _flash_kernel, causal=causal, q_offset=q_offset, block_q=block_q,
+        block_k=block_k, n_kv_blocks=nk, sm_scale=D ** -0.5)
+
+    grid = (B, H, nq, nk)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, block_q, D),
+                             lambda b, h, i, j, vlen: (b, h, i, 0)),
+                pl.BlockSpec((1, 1, block_k, D),
+                             lambda b, h, i, j, vlen: (b, h // G, j, 0)),
+                pl.BlockSpec((1, 1, block_k, D),
+                             lambda b, h, i, j, vlen: (b, h // G, j, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, block_q, D),
+                                   lambda b, h, i, j, vlen: (b, h, i, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((block_q, 1), jnp.float32),
+                pltpu.VMEM((block_q, 1), jnp.float32),
+                pltpu.VMEM((block_q, D), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, H, S, D), q.dtype),
+        interpret=interpret,
+    )(valid_len, q, k, v)

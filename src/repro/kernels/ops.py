@@ -1,0 +1,49 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Dispatch: on TPU the Mosaic kernels run natively; elsewhere callers request
+``interpret=True`` (kernel body executed in Python on CPU) or fall back to the
+``ref`` oracles (pure XLA). The model layer (``ArchConfig.attention_impl``)
+selects among "xla" | "pallas" | "pallas_interpret".
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.int8_matmul import int8_matmul
+
+
+def flash_attention_grouped(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                            causal: bool = True, q_offset=0,
+                            kv_valid_len=None,
+                            interpret: bool = False) -> jax.Array:
+    """Adapter from the model layout to the kernel layout.
+
+    q: (B, S, K, G, D); k/v: (B, T, K, D). Returns (B, S, K, G, D).
+    """
+    B, S, K, G, D = q.shape
+    T = k.shape[1]
+    kt = k.transpose(0, 2, 1, 3)    # (B, K, T, D)
+    vt = v.transpose(0, 2, 1, 3)
+    if S == 1:
+        # decode shape -> flash-decode kernel
+        qd = q[:, 0]                # (B, K, G, D)
+        vlen = kv_valid_len if kv_valid_len is not None else T
+        out = decode_attention(qd, kt, vt, valid_len=vlen,
+                               interpret=interpret)
+        return out[:, None].reshape(B, 1, K, G, D)
+    qh = q.transpose(0, 2, 3, 1, 4).reshape(B, K * G, S, D)
+    out = flash_attention(qh, kt, vt, valid_len=kv_valid_len, causal=causal,
+                          q_offset=int(q_offset) if not hasattr(
+                              q_offset, "dtype") else q_offset,
+                          interpret=interpret)
+    return out.reshape(B, K, G, S, D).transpose(0, 3, 1, 2, 4)
+
+
+__all__ = ["flash_attention", "decode_attention", "int8_matmul",
+           "flash_attention_grouped", "ref"]

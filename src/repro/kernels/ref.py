@@ -1,0 +1,76 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the correctness references swept against the kernels in
+``tests/test_kernels_*.py`` (interpret mode) and the XLA fallback used by the
+models on non-TPU backends.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True,
+                        q_offset: int = 0,
+                        kv_valid_len: Optional[int] = None) -> jax.Array:
+    """q: (B, H, S, D); k/v: (B, K, T, D) with H = K * G (GQA).
+
+    Returns (B, H, S, D). Softmax in f32.
+    """
+    B, H, S, D = q.shape
+    K = k.shape[1]
+    G = H // K
+    qg = q.reshape(B, K, G, S, D)
+    scores = jnp.einsum("bkgsd,bktd->bkgst", qg, k,
+                        preferred_element_type=jnp.float32) * (D ** -0.5)
+    T = k.shape[2]
+    t_idx = jnp.arange(T)
+    mask = jnp.ones((S, T), bool)
+    if causal:
+        s_idx = jnp.arange(S)[:, None] + q_offset
+        mask = t_idx[None, :] <= s_idx
+    if kv_valid_len is not None:
+        mask = mask & (t_idx[None, :] < kv_valid_len)
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgst,bktd->bkgsd", probs, v)
+    return out.reshape(B, H, S, D)
+
+
+def decode_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                         valid_len) -> jax.Array:
+    """One-token decode. q: (B, K, G, D); k/v: (B, K, T, D); valid_len scalar.
+
+    Returns (B, K, G, D).
+    """
+    B, K, G, D = q.shape
+    T = k.shape[2]
+    scores = jnp.einsum("bkgd,bktd->bkgt", q, k,
+                        preferred_element_type=jnp.float32) * (D ** -0.5)
+    mask = jnp.arange(T)[None, None, None, :] < valid_len
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bkgt,bktd->bkgd", probs, v)
+
+
+def int8_matmul_ref(x: jax.Array, w_q: jax.Array,
+                    scales: jax.Array) -> jax.Array:
+    """x: (M, Kd) bf16/f32; w_q: (Kd, N) int8; scales: (N,) per-channel f32.
+
+    Returns (M, N) in x.dtype; dequantized weight = w_q * scales.
+    """
+    w = w_q.astype(jnp.float32) * scales[None, :].astype(jnp.float32)
+    out = jnp.einsum("mk,kn->mn", x.astype(jnp.float32), w)
+    return out.astype(x.dtype)
+
+
+def quantize_int8(w: jax.Array):
+    """Per-output-channel symmetric int8 quantization. w: (Kd, N)."""
+    absmax = jnp.max(jnp.abs(w.astype(jnp.float32)), axis=0)
+    scales = jnp.where(absmax > 0, absmax / 127.0, 1.0)
+    w_q = jnp.clip(jnp.round(w.astype(jnp.float32) / scales[None, :]),
+                   -127, 127).astype(jnp.int8)
+    return w_q, scales

@@ -1,0 +1,233 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+# ^ MUST precede every other import: jax locks the device count on first use.
+
+"""Multi-pod dry-run.
+
+Lowers + compiles every (architecture x input-shape x mesh) cell against the
+production meshes (16x16 single-pod, 2x16x16 multi-pod), records
+memory_analysis / cost_analysis / collective bytes, and writes a JSON
+manifest consumed by EXPERIMENTS.md and benchmarks/roofline.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch llama3.2-1b \
+        --shape train_4k --mesh both
+    PYTHONPATH=src python -m repro.launch.dryrun --all --out dryrun.json
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.registry import ARCHS
+from repro.configs.shapes import ALL_SHAPES, SHAPES, shape_applicable
+from repro.distributed.parallel import (ParallelConfig,
+                                        activation_sharding_from,
+                                        set_activation_sharding)
+from repro.distributed import sharding as shd
+from repro.launch import specs as specs_lib
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import (analytic_compute_s, model_flops,
+                                   parse_collective_bytes, roofline_terms)
+from repro.models.model import build_model
+from repro.training.train_loop import make_train_step
+
+
+def _logits_spec(cfg, batch, ax):
+    return P(shd._dax(ax, batch), None, shd._max(ax, cfg.vocab))
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               attention_impl: str = "xla_chunked"):
+    """Build (jitted_fn, kwargs-of-ShapeDtypeStructs) for one cell."""
+    # flash-style chunked attention is the lowering default: the S x T score
+    # matrix must never materialize at 32k-524k (Pallas kernel on real TPU).
+    cfg = dataclasses.replace(ARCHS[arch], attention_impl=attention_impl)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    ax = shd.MeshAxes.from_mesh(mesh)
+    parallel = ParallelConfig(mesh=mesh, data_axes=ax.data,
+                              model_axis=ax.model, moe_impl="ep")
+    set_activation_sharding(activation_sharding_from(parallel))
+    model = build_model(cfg, parallel)
+    ins = specs_lib.input_specs(model, shape)
+    named = lambda specs: shd.to_named(mesh, specs)
+
+    if shape.kind == "train":
+        step = make_train_step(model)
+        state_specs = shd.train_state_specs(cfg, ax)
+        bspecs = shd.batch_specs(cfg, shape.global_batch, ax)
+        metrics_specs = {"loss": P(), "lr": P(), "grad_norm": P()}
+        fn = jax.jit(step,
+                     in_shardings=(named(state_specs), named(bspecs)),
+                     out_shardings=(named(state_specs),
+                                    named(metrics_specs)))
+        args = (ins["state"], ins["batch"])
+    elif shape.kind == "prefill":
+        pspecs = shd.param_specs(cfg, ax)
+        bspecs = shd.batch_specs(cfg, shape.global_batch, ax,
+                                 with_targets=False)
+        cspecs = shd.cache_specs(cfg, shape.global_batch, ax)
+        fn = jax.jit(model.prefill,
+                     in_shardings=(named(pspecs), named(bspecs)),
+                     out_shardings=(
+                         named(_logits_spec(cfg, shape.global_batch, ax)),
+                         named(cspecs)))
+        args = (ins["params"], ins["batch"])
+    else:
+        pspecs = shd.param_specs(cfg, ax)
+        cspecs = shd.cache_specs(cfg, shape.global_batch, ax)
+        tok_spec = P(shd._dax(ax, shape.global_batch), None)
+        # NOTE §Perf A-iter1: donating the cache (donate_argnums=(1,)) was
+        # tried and REFUTED on this backend: bytes accessed rose 24% (extra
+        # layout conversions outweigh the saved copy in the lowering).
+        fn = jax.jit(model.decode,
+                     in_shardings=(named(pspecs), named(cspecs),
+                                   named(tok_spec), named(P())),
+                     out_shardings=(
+                         named(_logits_spec(cfg, shape.global_batch, ax)),
+                         named(cspecs)))
+        args = (ins["params"], ins["cache"], ins["token"], ins["pos"])
+    return mesh, fn, args, shape, cfg
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             keep_hlo: bool = False) -> Dict[str, Any]:
+    shape = SHAPES[shape_name]
+    cfg = ARCHS[arch]
+    ok, reason = shape_applicable(cfg, shape)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    rec: Dict[str, Any] = {"arch": arch, "shape": shape_name,
+                           "mesh": mesh_name,
+                           "entry_point": shape.entry_point}
+    if not ok:
+        rec.update(status="skipped", reason=reason)
+        return rec
+    t0 = time.time()
+    try:
+        mesh, fn, args, shape, cfg = lower_cell(arch, shape_name, multi_pod)
+        with mesh:
+            lowered = fn.lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+            mem = compiled.memory_analysis()
+            cost = compiled.cost_analysis()
+        n_dev = mesh.size
+        hlo = compiled.as_text()
+        coll = parse_collective_bytes(hlo)
+        coll_bytes = float(sum(coll.values()))
+        terms = roofline_terms(cost, coll_bytes, n_dev)
+        mf = model_flops(cfg, shape)
+        rec.update(
+            status="ok",
+            lower_s=round(t_lower, 1), compile_s=round(t_compile, 1),
+            devices=n_dev,
+            # memory_analysis proves the per-device footprint fits
+            bytes_per_device={
+                "arguments": int(getattr(mem, "argument_size_in_bytes", 0)),
+                "outputs": int(getattr(mem, "output_size_in_bytes", 0)),
+                "temps": int(getattr(mem, "temp_size_in_bytes", 0)),
+                "peak": int(getattr(mem, "temp_size_in_bytes", 0)
+                            + getattr(mem, "argument_size_in_bytes", 0)),
+            },
+            cost_per_device={k: float(v) for k, v in cost.items()
+                             if k in ("flops", "bytes accessed",
+                                      "transcendentals")},
+            collective_bytes_per_device=coll,
+            roofline={
+                "compute_s": terms.compute_s,
+                "compute_s_analytic": analytic_compute_s(cfg, shape, n_dev),
+                "memory_s": terms.memory_s,
+                "collective_s": terms.collective_s,
+                "dominant": terms.dominant,
+                "step_time_s": terms.step_time_s,
+                "model_flops": mf,
+                "hlo_flops_global": terms.flops_global,
+                "useful_flops_ratio": mf / terms.flops_global
+                if terms.flops_global else 0.0,
+            },
+        )
+        if keep_hlo:
+            rec["hlo_path"] = f"/tmp/hlo_{arch}_{shape_name}_{mesh_name}.txt"
+            with open(rec["hlo_path"], "w") as f:
+                f.write(hlo)
+    except Exception as e:  # noqa: BLE001 — a cell failure is data
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-2000:])
+    finally:
+        set_activation_sharding(None)
+    rec["wall_s"] = round(time.time() - t0, 1)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="architecture id (or all)")
+    ap.add_argument("--shape", default=None, choices=list(SHAPES) + [None])
+    ap.add_argument("--mesh", default="both",
+                    choices=["pod", "multipod", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=None, help="append records to JSONL")
+    ap.add_argument("--keep-hlo", action="store_true")
+    ap.add_argument("--resume", action="store_true",
+                    help="skip cells already present (ok/skipped) in --out")
+    args = ap.parse_args()
+
+    archs = list(ARCHS) if (args.all or args.arch in (None, "all")) \
+        else [args.arch]
+    shapes = list(SHAPES) if args.shape is None else [args.shape]
+    meshes = {"pod": [False], "multipod": [True],
+              "both": [False, True]}[args.mesh]
+
+    done = set()
+    if args.resume and args.out:
+        import os
+        if os.path.exists(args.out):
+            with open(args.out) as f:
+                for line in f:
+                    r = json.loads(line)
+                    if r["status"] in ("ok", "skipped"):
+                        done.add((r["arch"], r["shape"], r["mesh"]))
+
+    records = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                mesh_name = "2x16x16" if mp else "16x16"
+                if (arch, shape, mesh_name) in done:
+                    continue
+                rec = run_cell(arch, shape, mp, keep_hlo=args.keep_hlo)
+                records.append(rec)
+                status = rec["status"]
+                extra = ""
+                if status == "ok":
+                    r = rec["roofline"]
+                    extra = (f" dominant={r['dominant']}"
+                             f" step={r['step_time_s']:.4f}s"
+                             f" peak_mem={rec['bytes_per_device']['peak']/2**30:.2f}GiB")
+                elif status == "error":
+                    extra = " " + rec["error"][:160]
+                print(f"[{status:7s}] {arch:24s} {shape:12s} "
+                      f"{rec['mesh']:8s}{extra}", flush=True)
+                if args.out:
+                    with open(args.out, "a") as f:
+                        f.write(json.dumps(rec) + "\n")
+    n_ok = sum(r["status"] == "ok" for r in records)
+    n_skip = sum(r["status"] == "skipped" for r in records)
+    n_err = sum(r["status"] == "error" for r in records)
+    print(f"\n{n_ok} ok, {n_skip} skipped (documented), {n_err} errors "
+          f"of {len(records)} cells")
+    if n_err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

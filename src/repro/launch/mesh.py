@@ -1,0 +1,20 @@
+"""Production mesh construction.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state. The single-pod mesh is 16x16 = 256 chips
+(data, model); the multi-pod mesh adds a leading pod axis: 2x16x16 = 512.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """1x1 mesh over the single host device (tests/examples)."""
+    return jax.make_mesh((1, 1), ("data", "model"))

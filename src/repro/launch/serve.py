@@ -1,0 +1,62 @@
+"""Cluster serving launcher.
+
+Brings up the INFaaS control plane (master + workers + autoscalers) against
+either the simulated executors (default; any scale) or the real host
+executor (reduced configs), registers the selected architectures, and
+drives a workload.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b \
+        --workers 2 --rate 50 --duration 60 --slo-ms 100
+"""
+from __future__ import annotations
+
+import argparse
+
+from repro.configs.registry import ARCHS
+from repro.sim.cluster import make_cluster
+from repro.sim.workload import poisson_arrivals
+from benchmarks.common import steady_metrics  # noqa: E402
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-1b",
+                    help="architecture id, or 'all'")
+    ap.add_argument("--workers", type=int, default=2)
+    ap.add_argument("--cpu-workers", type=int, default=1)
+    ap.add_argument("--rate", type=float, default=50.0, help="queries/s")
+    ap.add_argument("--duration", type=float, default=60.0)
+    ap.add_argument("--slo-ms", type=float, default=100.0)
+    ap.add_argument("--no-autoscale", action="store_true")
+    ap.add_argument("--hedge", action="store_true",
+                    help="enable hedged-request straggler mitigation")
+    args = ap.parse_args()
+
+    archs = None if args.arch == "all" else [ARCHS[args.arch]]
+    from repro.core.master import MasterConfig
+    cfg = MasterConfig(hedge_enabled=args.hedge)
+    c = make_cluster(n_accel=args.workers, n_cpu=args.cpu_workers,
+                     archs=archs, autoscale=not args.no_autoscale, cfg=cfg)
+    arch_names = [a for a in (
+        [args.arch] if args.arch != "all" else list(ARCHS))]
+
+    import numpy as np
+    rng = np.random.default_rng(0)
+
+    def fire(t):
+        a = arch_names[rng.integers(len(arch_names))]
+        c.api.online_query(mod_arch=a, latency_ms=args.slo_ms)
+
+    poisson_arrivals(c.loop, lambda t: args.rate, fire,
+                     t_end=args.duration, seed=0)
+    c.run_until(args.duration + 30.0)
+    m = steady_metrics(c.master.metrics, 0.0, args.duration)
+    print(f"served={m['completed']} thr={m['throughput_qps']:.1f} q/s "
+          f"viol={m['violation_rate']:.3f} p50={m['p50_ms']:.1f}ms "
+          f"p99={m['p99_ms']:.1f}ms")
+    alive = sum(1 for w in c.store.workers.values() if w.alive)
+    print(f"workers alive at end: {alive}")
+
+
+if __name__ == "__main__":
+    main()

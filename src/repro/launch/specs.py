@@ -1,0 +1,66 @@
+"""ShapeDtypeStruct stand-ins for every (arch x shape) dry-run cell.
+
+No device allocation: everything is built with jax.eval_shape /
+ShapeDtypeStruct; the dry-run attaches NamedShardings via jit in_shardings.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.configs.shapes import ShapeConfig
+from repro.models.model import Model
+
+
+def batch_structs(cfg: ArchConfig, batch: int, seq: int,
+                  with_targets: bool = True) -> Dict[str, Any]:
+    out = {"tokens": jax.ShapeDtypeStruct((batch, seq), jnp.int32)}
+    if with_targets:
+        out["targets"] = jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+    if cfg.family == "audio":
+        out["frames"] = jax.ShapeDtypeStruct((batch, seq, cfg.d_model),
+                                             jnp.dtype(cfg.dtype))
+    if cfg.family == "vlm":
+        out["image_embeds"] = jax.ShapeDtypeStruct(
+            (batch, cfg.n_image_tokens, cfg.d_model), jnp.dtype(cfg.dtype))
+    return out
+
+
+def param_structs(model: Model) -> Any:
+    return jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+
+
+def train_state_structs(model: Model) -> Any:
+    from repro.training.train_loop import init_train_state
+    return jax.eval_shape(
+        lambda: init_train_state(model, jax.random.PRNGKey(0)))
+
+
+def decode_structs(model: Model, shape: ShapeConfig) -> Tuple[Any, Any, Any]:
+    """(cache, token, pos) structs for serve_step: one new token against a
+    cache of shape.seq_len (the last slot receives the new token)."""
+    cfg = model.cfg
+    cache = model.cache_shapes(shape.global_batch, shape.seq_len,
+                               enc_len=shape.seq_len)
+    token = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    return cache, token, pos
+
+
+def input_specs(model: Model, shape: ShapeConfig) -> Dict[str, Any]:
+    """All entry-point inputs for one cell, keyed by argument name."""
+    cfg = model.cfg
+    if shape.kind == "train":
+        return {"state": train_state_structs(model),
+                "batch": batch_structs(cfg, shape.global_batch,
+                                       shape.seq_len)}
+    if shape.kind == "prefill":
+        return {"params": param_structs(model),
+                "batch": batch_structs(cfg, shape.global_batch,
+                                       shape.seq_len, with_targets=False)}
+    cache, token, pos = decode_structs(model, shape)
+    return {"params": param_structs(model), "cache": cache,
+            "token": token, "pos": pos}

@@ -1,0 +1,51 @@
+"""Training launcher: real execution on host for reduced configs, or
+``--dryrun`` to lower/compile the full config on the production mesh.
+
+    PYTHONPATH=src python -m repro.launch.train --arch llama3.2-1b \
+        --steps 100 --ckpt /tmp/run1
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-moe-235b-a22b \
+        --dryrun --multi-pod
+"""
+from __future__ import annotations
+
+import argparse
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-1b")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--dryrun", action="store_true",
+                    help="lower+compile the FULL config on the production "
+                         "mesh instead of training the reduced config")
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+
+    if args.dryrun:
+        # must set the device-count flag before importing anything jax-y
+        from repro.launch import dryrun as dr
+        rec = dr.run_cell(args.arch, "train_4k", args.multi_pod)
+        import json
+        print(json.dumps(rec, indent=2))
+        return
+
+    from repro.configs.registry import ARCHS
+    from repro.models import build_model
+    from repro.training import data as data_lib
+    from repro.training.optimizer import AdamWConfig
+    from repro.training.train_loop import TrainConfig, train
+
+    cfg = ARCHS[args.arch].reduced()
+    model = build_model(cfg)
+    dcfg = data_lib.DataConfig(batch=args.batch, seq=args.seq)
+    tcfg = TrainConfig(opt=AdamWConfig(total_steps=args.steps))
+    out = train(model, dcfg, steps=args.steps, tcfg=tcfg,
+                ckpt_dir=args.ckpt, log=print)
+    print(f"final loss {out['losses'][-1]:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""KV-cache and recurrent-state containers.
+
+Caches are plain pytrees (dicts of arrays) so they cross pjit/shard_map
+boundaries and checkpoint naturally. Attention caches are laid out
+(L, B, S_max, K, D) — layer-major so the per-layer scan can consume them as
+scan xs and emit updated slices as ys.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+Cache = Dict[str, Any]
+
+
+def alloc_attn_cache(n_layers: int, batch: int, max_len: int, n_kv: int,
+                     head_dim: int, dtype) -> Cache:
+    shape = (n_layers, batch, max_len, n_kv, head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def update_layer_cache(k_cache: jax.Array, v_cache: jax.Array,
+                       k_new: jax.Array, v_new: jax.Array,
+                       pos: Any) -> Tuple[jax.Array, jax.Array]:
+    """Write (B, S_new, K, D) at position ``pos`` of a (B, S_max, K, D) buffer."""
+    k_cache = lax.dynamic_update_slice_in_dim(k_cache, k_new.astype(k_cache.dtype),
+                                              pos, axis=1)
+    v_cache = lax.dynamic_update_slice_in_dim(v_cache, v_new.astype(v_cache.dtype),
+                                              pos, axis=1)
+    return k_cache, v_cache

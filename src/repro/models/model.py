@@ -1,0 +1,163 @@
+"""Unified model interface over the 10 assigned architecture families.
+
+``build_model(cfg, parallel=None)`` returns a ``Model`` with:
+  * ``init(rng) -> params``
+  * ``forward(params, batch) -> logits``          (full-sequence, causal)
+  * ``loss(params, batch) -> scalar``             (mean token cross-entropy)
+  * ``prefill(params, batch) -> (logits, cache)``
+  * ``decode(params, cache, token, pos) -> (logits, cache)``  (serve_step)
+  * ``cache_shapes(batch, max_len) -> pytree of ShapeDtypeStruct``
+
+All functions are jit/pjit-compatible and usable under ``jax.eval_shape``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.models import moe as M
+from repro.models import ssm as S
+from repro.models import xlstm as X
+
+Batch = Dict[str, jax.Array]
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+    init: Callable[..., Any]
+    forward: Callable[..., jax.Array]
+    prefill: Callable[..., Any]
+    decode: Callable[..., Any]
+    cache_shapes: Callable[..., Any]
+
+    def loss(self, params, batch: Batch) -> jax.Array:
+        logits = self.forward(params, batch)
+        return L.cross_entropy(logits, batch["targets"])
+
+
+def _attn_cache_shapes(cfg: ArchConfig, n_layers: int, batch: int,
+                       max_len: int):
+    dtype = jnp.dtype(cfg.dtype)
+    sh = (n_layers, batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+    return {"k": jax.ShapeDtypeStruct(sh, dtype),
+            "v": jax.ShapeDtypeStruct(sh, dtype)}
+
+
+def build_model(cfg: ArchConfig, parallel=None) -> Model:
+    fam = cfg.family
+
+    if fam in ("dense",):
+        return Model(
+            cfg=cfg,
+            init=lambda rng: T.init_dense(cfg, rng),
+            forward=lambda p, b: T.forward_dense(cfg, p, b["tokens"]),
+            prefill=lambda p, b: T.prefill_dense(cfg, p, b["tokens"]),
+            decode=lambda p, c, t, pos: T.decode_dense(cfg, p, c, t, pos),
+            cache_shapes=lambda batch, max_len, **kw: _attn_cache_shapes(
+                cfg, cfg.n_layers, batch, max_len),
+        )
+
+    if fam == "moe":
+        return Model(
+            cfg=cfg,
+            init=lambda rng: M.init_moe(cfg, rng),
+            forward=lambda p, b: M.forward_moe(cfg, p, b["tokens"], parallel),
+            prefill=lambda p, b: M.prefill_moe(cfg, p, b["tokens"], parallel),
+            decode=lambda p, c, t, pos: M.decode_moe(cfg, p, c, t, pos,
+                                                     parallel),
+            cache_shapes=lambda batch, max_len, **kw: _attn_cache_shapes(
+                cfg, cfg.n_layers, batch, max_len),
+        )
+
+    if fam == "hybrid":
+        return Model(
+            cfg=cfg,
+            init=lambda rng: S.init_zamba(cfg, rng),
+            forward=lambda p, b: S.forward_zamba(cfg, p, b["tokens"]),
+            prefill=lambda p, b: S.prefill_zamba(cfg, p, b["tokens"]),
+            decode=lambda p, c, t, pos: S.decode_zamba(cfg, p, c, t, pos),
+            cache_shapes=lambda batch, max_len, **kw: S.zamba_cache_shapes(
+                cfg, batch, max_len),
+        )
+
+    if fam == "ssm":
+        return Model(
+            cfg=cfg,
+            init=lambda rng: X.init_xlstm(cfg, rng),
+            forward=lambda p, b: X.forward_xlstm(cfg, p, b["tokens"]),
+            prefill=lambda p, b: X.prefill_xlstm(cfg, p, b["tokens"]),
+            decode=lambda p, c, t, pos: X.decode_xlstm(cfg, p, c, t, pos),
+            cache_shapes=lambda batch, max_len, **kw: X.xlstm_cache_shapes(
+                cfg, batch, max_len),
+        )
+
+    if fam == "audio":
+        def cache_shapes(batch, max_len, enc_len=None, **kw):
+            enc_len = enc_len or max_len
+            c = _attn_cache_shapes(cfg, cfg.n_layers, batch, max_len)
+            xsh = (cfg.n_layers, batch, enc_len, cfg.n_kv_heads, cfg.head_dim)
+            dtype = jnp.dtype(cfg.dtype)
+            c["xk"] = jax.ShapeDtypeStruct(xsh, dtype)
+            c["xv"] = jax.ShapeDtypeStruct(xsh, dtype)
+            return c
+        return Model(
+            cfg=cfg,
+            init=lambda rng: T.init_audio(cfg, rng),
+            forward=lambda p, b: T.forward_audio(cfg, p, b["tokens"],
+                                                 b["frames"]),
+            prefill=lambda p, b: T.prefill_audio(cfg, p, b["tokens"],
+                                                 b["frames"]),
+            decode=lambda p, c, t, pos: T.decode_audio(cfg, p, c, t, pos),
+            cache_shapes=cache_shapes,
+        )
+
+    if fam == "vlm":
+        n_cross = cfg.n_layers // cfg.cross_attn_every
+        n_self_per = cfg.cross_attn_every - 1
+
+        def cache_shapes(batch, max_len, **kw):
+            dtype = jnp.dtype(cfg.dtype)
+            sh = (n_cross, n_self_per, batch, max_len, cfg.n_kv_heads,
+                  cfg.head_dim)
+            xsh = (n_cross, batch, cfg.n_image_tokens, cfg.n_kv_heads,
+                   cfg.head_dim)
+            return {"k": jax.ShapeDtypeStruct(sh, dtype),
+                    "v": jax.ShapeDtypeStruct(sh, dtype),
+                    "xk": jax.ShapeDtypeStruct(xsh, dtype),
+                    "xv": jax.ShapeDtypeStruct(xsh, dtype)}
+        return Model(
+            cfg=cfg,
+            init=lambda rng: T.init_vlm(cfg, rng),
+            forward=lambda p, b: T.forward_vlm(cfg, p, b["tokens"],
+                                               b["image_embeds"]),
+            prefill=lambda p, b: T.prefill_vlm(cfg, p, b["tokens"],
+                                               b["image_embeds"]),
+            decode=lambda p, c, t, pos: T.decode_vlm(cfg, p, c, t, pos),
+            cache_shapes=cache_shapes,
+        )
+
+    raise ValueError(f"unknown family {fam!r}")
+
+
+def make_batch(cfg: ArchConfig, rng, batch: int, seq: int,
+               with_targets: bool = True) -> Batch:
+    """Random batch for smoke tests / examples (concrete arrays)."""
+    k1, k2, k3 = jax.random.split(rng, 3)
+    b: Batch = {"tokens": jax.random.randint(k1, (batch, seq), 0, cfg.vocab)}
+    if with_targets:
+        b["targets"] = jax.random.randint(k2, (batch, seq), 0, cfg.vocab)
+    if cfg.family == "audio":
+        b["frames"] = jax.random.normal(k3, (batch, seq, cfg.d_model),
+                                        jnp.float32).astype(cfg.dtype)
+    if cfg.family == "vlm":
+        b["image_embeds"] = jax.random.normal(
+            k3, (batch, cfg.n_image_tokens, cfg.d_model),
+            jnp.float32).astype(cfg.dtype)
+    return b

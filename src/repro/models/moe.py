@@ -1,0 +1,296 @@
+"""Mixture-of-Experts decoder (moonshot 64e/top-6, qwen3 128e/top-8).
+
+Two FFN lowerings:
+
+* ``moe_ffn_dense`` — scatter/gather dispatch on a single device (smoke tests,
+  host execution). Capacity-bounded top-k with token dropping, faithful to
+  GShard-style serving MoE.
+* ``moe_ffn_ep`` — expert-parallel shard_map: local top-k + capacity dispatch,
+  ``all_to_all`` over the ``model`` mesh axis to the expert owners, expert
+  GEMM, reverse ``all_to_all``, weighted combine. This is the TPU-native
+  lowering (token dim collective only, no dispatch-mask blowup).
+
+Attention/embedding reuse the dense transformer blocks.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models import kvcache as KV
+from repro.models.transformer import (_maybe_remat, _stacked_attn_init,
+                                      _decode_block)
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# init
+
+
+def _moe_mlp_init(rng, n: int, cfg: ArchConfig, dtype) -> Params:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(rng, 5)
+    p = {
+        "router": L.dense_init(ks[0], (n, d, e), jnp.float32, in_axis=1),
+        "w_gate": L.dense_init(ks[1], (n, e, d, f), dtype, in_axis=2),
+        "w_up": L.dense_init(ks[2], (n, e, d, f), dtype, in_axis=2),
+        "w_down": L.dense_init(ks[3], (n, e, f, d), dtype, in_axis=2),
+    }
+    if cfg.n_shared_experts:
+        fs = cfg.d_ff * cfg.n_shared_experts
+        k1, k2, k3 = jax.random.split(ks[4], 3)
+        p["shared"] = {
+            "w_gate": L.dense_init(k1, (n, d, fs), dtype, in_axis=1),
+            "w_up": L.dense_init(k2, (n, d, fs), dtype, in_axis=1),
+            "w_down": L.dense_init(k3, (n, fs, d), dtype, in_axis=1),
+        }
+    return p
+
+
+def init_moe(cfg: ArchConfig, rng) -> Params:
+    dtype = jnp.dtype(cfg.param_dtype)
+    ke, ka, km, kh = jax.random.split(rng, 4)
+    n = cfg.n_layers
+    return {
+        "embed": L.embed_init(ke, (cfg.vocab, cfg.d_model), dtype),
+        "layers": {
+            "attn": _stacked_attn_init(ka, n, cfg, dtype),
+            "moe": _moe_mlp_init(km, n, cfg, dtype),
+            "ln1": jnp.zeros((n, cfg.d_model), dtype),
+            "ln2": jnp.zeros((n, cfg.d_model), dtype),
+        },
+        "ln_f": jnp.zeros((cfg.d_model,), dtype),
+        "head": L.embed_init(kh, (cfg.vocab, cfg.d_model), dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# routing helpers
+
+
+def _route(x2d: jax.Array, router: jax.Array, cfg: ArchConfig):
+    """x2d: (T, d). Returns (weights (T,k) f32, experts (T,k) i32)."""
+    logits = jnp.einsum("td,de->te", x2d.astype(jnp.float32), router)
+    probs = jax.nn.softmax(logits, axis=-1)
+    w, idx = lax.top_k(probs, cfg.top_k)
+    w = w / jnp.sum(w, axis=-1, keepdims=True)
+    return w, idx
+
+
+def _capacity(n_tokens: int, cfg: ArchConfig) -> int:
+    c = int(math.ceil(n_tokens * cfg.top_k * cfg.capacity_factor
+                      / cfg.n_experts))
+    return max(4, -(-c // 4) * 4)  # round up to a multiple of 4
+
+
+def _dispatch_indices(idx: jax.Array, cfg: ArchConfig, capacity: int):
+    """idx: (T, k) expert ids. Returns (pos (T,k), keep (T,k) bool).
+
+    Position of each assignment within its expert's capacity buffer,
+    computed with a cumulative count in flattened (token-major) order —
+    the GShard dispatch order.
+    """
+    T, k = idx.shape
+    flat = idx.reshape(T * k)
+    onehot = jax.nn.one_hot(flat, cfg.n_experts, dtype=jnp.int32)  # (T*k, E)
+    pos = jnp.cumsum(onehot, axis=0) - onehot                      # pre-count
+    pos_of = jnp.sum(pos * onehot, axis=-1).reshape(T, k)
+    keep = pos_of < capacity
+    return pos_of, keep
+
+
+def _expert_gemm(buf: jax.Array, wg, wu, wd) -> jax.Array:
+    """buf: (E, C, d) tokens grouped per expert; per-expert SwiGLU."""
+    g = jnp.einsum("ecd,edf->ecf", buf, wg)
+    u = jnp.einsum("ecd,edf->ecf", buf, wu)
+    h = jax.nn.silu(g) * u
+    return jnp.einsum("ecf,efd->ecd", h, wd)
+
+
+# ---------------------------------------------------------------------------
+# single-device (dense scatter) lowering
+
+
+def moe_ffn_dense(x: jax.Array, p: Params, cfg: ArchConfig) -> jax.Array:
+    """x: (B, S, d) -> (B, S, d). Scatter-based dispatch; no collectives."""
+    B, S, d = x.shape
+    x2 = x.reshape(B * S, d)
+    T = B * S
+    w, idx = _route(x2, p["router"], cfg)
+    C = _capacity(T, cfg)
+    pos, keep = _dispatch_indices(idx, cfg, C)
+
+    k = cfg.top_k
+    tok = jnp.repeat(jnp.arange(T), k)            # (T*k,)
+    e_f = idx.reshape(T * k)
+    p_f = jnp.clip(pos.reshape(T * k), 0, C - 1)
+    keep_f = keep.reshape(T * k)
+
+    buf = jnp.zeros((cfg.n_experts, C, d), x.dtype)
+    updates = x2[tok] * keep_f[:, None].astype(x.dtype)
+    buf = buf.at[e_f, p_f].add(updates)
+
+    out_buf = _expert_gemm(buf, p["w_gate"], p["w_up"], p["w_down"])
+
+    gathered = out_buf[e_f, p_f]                   # (T*k, d)
+    w_f = (w.reshape(T * k) * keep_f).astype(x.dtype)
+    y = jnp.zeros((T, d), x.dtype).at[tok].add(gathered * w_f[:, None])
+    y = y.reshape(B, S, d)
+    if "shared" in p:
+        y = y + L.swiglu(x, p["shared"])
+    return y
+
+
+# ---------------------------------------------------------------------------
+# expert-parallel shard_map lowering
+
+
+def moe_ffn_ep(x: jax.Array, p: Params, cfg: ArchConfig, parallel) -> jax.Array:
+    """Expert parallelism over the ``model`` axis via explicit all_to_all.
+
+    Tokens enter sharded over BOTH the data axes (batch) and the model axis
+    (sequence) — matching the sequence-parallel residual stream — so each
+    device routes only B_l*S/M tokens and the dispatch buffers stay small.
+    """
+    mesh = parallel.mesh
+    ep_axis = parallel.model_axis
+    M = mesh.shape[ep_axis]
+    seq_shardable = x.shape[1] % M == 0 and x.shape[1] > 1
+    data_spec = P(parallel.data_axes, ep_axis if seq_shardable else None,
+                  None)
+    assert cfg.n_experts % M == 0, "n_experts must divide the model axis"
+    e_local = cfg.n_experts // M
+
+    def local_fn(x_l, router, wg, wu, wd):
+        # x_l: (B_l, S, d); wg/wu/wd: (E_local, d, f); router: (d, E)
+        Bl, S, d = x_l.shape
+        T = Bl * S
+        x2 = x_l.reshape(T, d)
+        w, idx = _route(x2, router, cfg)
+        C = _capacity(T, cfg)
+        pos, keep = _dispatch_indices(idx, cfg, C)
+        k = cfg.top_k
+        tok = jnp.repeat(jnp.arange(T), k)
+        e_f = idx.reshape(T * k)
+        p_f = jnp.clip(pos.reshape(T * k), 0, C - 1)
+        keep_f = keep.reshape(T * k)
+        buf = jnp.zeros((cfg.n_experts, C, d), x_l.dtype)
+        buf = buf.at[e_f, p_f].add(x2[tok] * keep_f[:, None].astype(x_l.dtype))
+        # (E, C, d) -> (M, E_local, C, d) -> all_to_all over the EP axis
+        buf = buf.reshape(M, e_local, C, d)
+        buf = lax.all_to_all(buf, ep_axis, split_axis=0, concat_axis=0,
+                             tiled=False)
+        # (M, E_local, C, d): tokens from every source shard for my experts
+        buf = buf.transpose(1, 0, 2, 3).reshape(e_local, M * C, d)
+        out = _expert_gemm(buf, wg, wu, wd)
+        # reverse: (E_local, M*C, d) -> (M, E_local, C, d) -> all_to_all back
+        out = out.reshape(e_local, M, C, d).transpose(1, 0, 2, 3)
+        out = lax.all_to_all(out, ep_axis, split_axis=0, concat_axis=0,
+                             tiled=False)
+        out = out.reshape(cfg.n_experts, C, d)
+        gathered = out[e_f, p_f]
+        w_f = (w.reshape(T * k) * keep_f).astype(x_l.dtype)
+        y = jnp.zeros((T, d), x_l.dtype).at[tok].add(gathered * w_f[:, None])
+        return y.reshape(Bl, S, d)
+
+    from jax.experimental.shard_map import shard_map
+    # spec P(ep_axis) shards dim0 (E) of the expert weights across the axis
+    in_specs = (data_spec, P(), P(ep_axis), P(ep_axis), P(ep_axis))
+    fn = shard_map(local_fn, mesh=mesh,
+                   in_specs=in_specs,
+                   out_specs=data_spec, check_rep=False)
+    y = fn(x, p["router"], p["w_gate"], p["w_up"], p["w_down"])
+    if "shared" in p:
+        # shared experts are dense; GSPMD handles them outside the shard_map
+        y = y + L.swiglu(x, p["shared"])
+    return y
+
+
+def moe_ffn(x, p, cfg: ArchConfig, parallel=None) -> jax.Array:
+    if parallel is not None and parallel.moe_impl == "ep":
+        return moe_ffn_ep(x, p, cfg, parallel)
+    return moe_ffn_dense(x, p, cfg)
+
+
+# ---------------------------------------------------------------------------
+# full model: forward / prefill / decode
+
+
+def _moe_block(x, blk, cfg: ArchConfig, parallel, *, positions=None):
+    h = L.rmsnorm(x, blk["ln1"])
+    q, k, v = L.attn_qkv(h, blk["attn"])
+    if positions is None:
+        positions = jnp.arange(x.shape[1])[None, :]
+    q = L.apply_rope(q, positions, cfg.rope_theta)
+    k = L.apply_rope(k, positions, cfg.rope_theta)
+    o = L.attention_core(q, k, v, causal=True, impl=cfg.attention_impl)
+    x = x + L.attn_out(o, blk["attn"])
+    x = x + moe_ffn(L.rmsnorm(x, blk["ln2"]), blk["moe"], cfg, parallel)
+    return L.constrain_residual(x), (k, v)
+
+
+def forward_moe(cfg: ArchConfig, params: Params, tokens: jax.Array,
+                parallel=None) -> jax.Array:
+    dtype = jnp.dtype(cfg.dtype)
+    x = L.embed_tokens(tokens, params["embed"], dtype)
+
+    def body(carry, blk):
+        out, _ = _moe_block(carry, blk, cfg, parallel)
+        return out, None
+
+    x, _ = lax.scan(_maybe_remat(body, cfg), x, params["layers"])
+    x = L.rmsnorm(x, params["ln_f"])
+    return L.lm_logits(x, params["head"])
+
+
+def prefill_moe(cfg: ArchConfig, params: Params, tokens: jax.Array,
+                parallel=None):
+    dtype = jnp.dtype(cfg.dtype)
+    B, S = tokens.shape
+    positions = jnp.arange(S)[None, :]
+    x = L.embed_tokens(tokens, params["embed"], dtype)
+
+    def body(carry, blk):
+        out, (k, v) = _moe_block(carry, blk, cfg, parallel,
+                                 positions=positions)
+        return out, (k, v)
+
+    x, (ks, vs) = lax.scan(_maybe_remat(body, cfg), x, params["layers"])
+    x = L.rmsnorm(x, params["ln_f"])
+    logits = L.lm_logits(x[:, -1:], params["head"])
+    return logits, {"k": ks, "v": vs}
+
+
+def decode_moe(cfg: ArchConfig, params: Params, cache, token: jax.Array, pos,
+               parallel=None):
+    dtype = jnp.dtype(cfg.dtype)
+    x = L.embed_tokens(token, params["embed"], dtype)
+
+    def body(carry, xs):
+        blk, kc, vc = xs
+        h = L.rmsnorm(carry, blk["ln1"])
+        q, k, v = L.attn_qkv(h, blk["attn"])
+        positions = jnp.full((carry.shape[0], 1), pos)
+        q = L.apply_rope(q, positions, cfg.rope_theta)
+        k = L.apply_rope(k, positions, cfg.rope_theta)
+        kc, vc = KV.update_layer_cache(kc, vc, k, v, pos)
+        o = L.attention_core(q, kc, vc, causal=False, kv_valid_len=pos + 1,
+                             impl=cfg.attention_impl)
+        out = carry + L.attn_out(o, blk["attn"])
+        out = out + moe_ffn(L.rmsnorm(out, blk["ln2"]), blk["moe"], cfg,
+                            parallel)
+        return out, (kc, vc)
+
+    x, (ks, vs) = lax.scan(body, x, (params["layers"], cache["k"], cache["v"]))
+    x = L.rmsnorm(x, params["ln_f"])
+    logits = L.lm_logits(x, params["head"])
+    return logits, {"k": ks, "v": vs}

@@ -1,0 +1,445 @@
+"""Mamba2 (SSD) blocks and the Zamba2 hybrid backbone.
+
+The SSD layer follows the chunked algorithm of Mamba-2 [arXiv:2405.21060]:
+intra-chunk contributions via a (Q, Q) decay-masked score matrix, inter-chunk
+via a scan over per-chunk states. Decode is the O(1)-per-token recurrence on
+the (B, H, N, P) state — this is what makes ``long_500k`` runnable.
+
+Zamba2 [arXiv:2411.15242]: a stack of Mamba2 layers with ONE shared
+transformer block (attention + SwiGLU, identical parameters) invoked every
+``shared_attn_every`` layers. We structure it as scan-over-groups:
+(shared_attn_every mamba layers, then the shared block), plus a mamba tail.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models import kvcache as KV
+from repro.models.transformer import _maybe_remat, _stacked_attn_init
+
+Params = Dict[str, Any]
+
+CONV_WIDTH = 4
+
+
+def mamba_dims(cfg: ArchConfig) -> Tuple[int, int, int, int]:
+    """(d_inner, n_heads_mamba, head_dim_mamba, conv_channels)."""
+    d_inner = 2 * cfg.d_model
+    p = 64 if cfg.d_model >= 512 else 16
+    h = d_inner // p
+    conv_ch = d_inner + 2 * cfg.ssm_state
+    return d_inner, h, p, conv_ch
+
+
+# ---------------------------------------------------------------------------
+# init
+
+
+def _mamba_stack_init(rng, n: int, cfg: ArchConfig, dtype) -> Params:
+    # projections kept SEPARATE (not packed) so each output dim shards
+    # cleanly: w_z/w_x on d_inner (head-aligned), w_bc replicated (tiny),
+    # w_dt on mamba heads. Depthwise convs split exactly the same way
+    # (depthwise conv of a concat == concat of depthwise convs).
+    d = cfg.d_model
+    di, h, p_, ci = mamba_dims(cfg)
+    n_state = cfg.ssm_state
+    ks = jax.random.split(rng, 7)
+    return {
+        "w_z": L.dense_init(ks[0], (n, d, di), dtype, in_axis=1),
+        "w_x": L.dense_init(ks[1], (n, d, di), dtype, in_axis=1),
+        "w_bc": L.dense_init(ks[2], (n, d, 2 * n_state), dtype, in_axis=1),
+        "w_dt": L.dense_init(ks[3], (n, d, h), jnp.float32, in_axis=1),
+        "conv_x_w": L.dense_init(ks[4], (n, CONV_WIDTH, di), dtype,
+                                 in_axis=1),
+        "conv_x_b": jnp.zeros((n, di), dtype),
+        "conv_bc_w": L.dense_init(ks[5], (n, CONV_WIDTH, 2 * n_state), dtype,
+                                  in_axis=1),
+        "conv_bc_b": jnp.zeros((n, 2 * n_state), dtype),
+        "A_log": jnp.zeros((n, h), jnp.float32),        # A = -exp(A_log)
+        "D": jnp.ones((n, h), jnp.float32),
+        "dt_bias": jnp.zeros((n, h), jnp.float32),
+        "norm": jnp.zeros((n, di), dtype),
+        "out_proj": L.dense_init(ks[6], (n, di, d), dtype, in_axis=1),
+    }
+
+
+def init_zamba(cfg: ArchConfig, rng) -> Params:
+    dtype = jnp.dtype(cfg.param_dtype)
+    ke, km, ksh, kh = jax.random.split(rng, 4)
+    ka, km2 = jax.random.split(ksh)
+    shared = {
+        "attn": jax.tree.map(lambda a: a[0], _stacked_attn_init(ka, 1, cfg, dtype)),
+        "mlp": {
+            "w_gate": L.dense_init(jax.random.fold_in(km2, 0),
+                                   (cfg.d_model, cfg.d_ff), dtype, in_axis=0),
+            "w_up": L.dense_init(jax.random.fold_in(km2, 1),
+                                 (cfg.d_model, cfg.d_ff), dtype, in_axis=0),
+            "w_down": L.dense_init(jax.random.fold_in(km2, 2),
+                                   (cfg.d_ff, cfg.d_model), dtype, in_axis=0),
+        },
+        "ln1": jnp.zeros((cfg.d_model,), dtype),
+        "ln2": jnp.zeros((cfg.d_model,), dtype),
+    }
+    return {
+        "embed": L.embed_init(ke, (cfg.vocab, cfg.d_model), dtype),
+        "mamba": _mamba_stack_init(km, cfg.n_layers, cfg, dtype),
+        "shared": shared,
+        "ln_f": jnp.zeros((cfg.d_model,), dtype),
+        "head": L.embed_init(kh, (cfg.vocab, cfg.d_model), dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# SSD core
+
+
+def _segsum(x: jax.Array) -> jax.Array:
+    """x: (..., Q) log-decay increments -> (..., Q, Q) masked cumulative sums
+    M[i, j] = sum_{l in (j, i]} x_l for i >= j, -inf otherwise."""
+    Q = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(xdt: jax.Array, dA: jax.Array, B_: jax.Array, C_: jax.Array,
+                chunk: int, h0: Optional[jax.Array] = None):
+    """Chunked SSD scan.
+
+    xdt: (b, l, h, p) inputs pre-scaled by dt; dA: (b, l, h) log decays (<=0);
+    B_, C_: (b, l, n) shared across heads (n_groups=1).
+    h0: optional initial state (b, h, n, p).
+    Returns (y (b, l, h, p), final_state (b, h, n, p)).
+    """
+    b, l, h, p = xdt.shape
+    n = B_.shape[-1]
+    assert l % chunk == 0, (l, chunk)
+    nc = l // chunk
+    x_ = xdt.reshape(b, nc, chunk, h, p)
+    dA_ = dA.reshape(b, nc, chunk, h).astype(jnp.float32)
+    B2 = B_.reshape(b, nc, chunk, n)
+    C2 = C_.reshape(b, nc, chunk, n)
+
+    # --- intra-chunk: decay-masked attention-like contraction
+    Lm = jnp.exp(_segsum(dA_.transpose(0, 3, 1, 2)))          # (b,h,nc,Q,Q)
+    scores = jnp.einsum("bcin,bcjn->bcij", C2, B2,
+                        preferred_element_type=jnp.float32)
+    y_intra = jnp.einsum("bhcij,bcij,bcjhp->bcihp",
+                         Lm.astype(xdt.dtype),
+                         scores.astype(xdt.dtype), x_)
+
+    # --- per-chunk end states
+    cs = jnp.cumsum(dA_, axis=2)                              # (b,nc,Q,h)
+    decay_to_end = jnp.exp(cs[:, :, -1:, :] - cs)             # (b,nc,Q,h)
+    S_c = jnp.einsum("bcjn,bcjh,bcjhp->bchnp", B2,
+                     decay_to_end.astype(xdt.dtype), x_)
+
+    # --- inter-chunk scan
+    total = jnp.exp(cs[:, :, -1, :]).astype(xdt.dtype)        # (b,nc,h)
+    if h0 is None:
+        h0 = jnp.zeros((b, h, n, p), xdt.dtype)
+
+    def body(S_prev, inp):
+        tot, Sc = inp
+        S_new = S_prev * tot[..., None, None] + Sc
+        return S_new, S_prev
+
+    S_final, S_prevs = lax.scan(
+        body, h0, (total.transpose(1, 0, 2), S_c.transpose(1, 0, 2, 3, 4)))
+    S_prevs = S_prevs.transpose(1, 0, 2, 3, 4)                # (b,nc,h,n,p)
+
+    y_inter = jnp.einsum("bcin,bcih,bchnp->bcihp", C2,
+                         jnp.exp(cs).astype(xdt.dtype),       # (b,nc,Q,h)
+                         S_prevs)
+    y = (y_intra + y_inter).reshape(b, l, h, p)
+    return y, S_final
+
+
+def ssd_step(x1: jax.Array, dA1: jax.Array, B1: jax.Array, C1: jax.Array,
+             state: jax.Array):
+    """One-token recurrence. x1: (b,h,p) pre-scaled by dt; dA1: (b,h);
+    B1, C1: (b,n); state: (b,h,n,p)."""
+    decay = jnp.exp(dA1.astype(jnp.float32)).astype(x1.dtype)
+    state = state * decay[..., None, None] + jnp.einsum("bn,bhp->bhnp", B1, x1)
+    y = jnp.einsum("bn,bhnp->bhp", C1, state)
+    return y, state
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 block
+
+
+def _gated_rmsnorm(y: jax.Array, z: jax.Array, scale: jax.Array) -> jax.Array:
+    return L.rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                     scale)
+
+
+def _causal_conv_full(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv. x: (B, L, C); w: (W, C)."""
+    W = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + x.shape[1], :] * w[i][None, None, :]
+              for i in range(W))
+    return out + b[None, None, :]
+
+
+def _conv_step(x1: jax.Array, conv_state: jax.Array, w: jax.Array,
+               b: jax.Array):
+    """x1: (B, C) one token; conv_state: (B, W-1, C)."""
+    window = jnp.concatenate([conv_state, x1[:, None, :]], axis=1)  # (B,W,C)
+    out = jnp.einsum("bwc,wc->bc", window, w) + b
+    return out, window[:, 1:, :]
+
+
+def mamba_block_full(x: jax.Array, p: Params, cfg: ArchConfig,
+                     h0: Optional[jax.Array] = None):
+    """x: (B, L, d). Returns (y (B, L, d), final ssm_state (B, h, n, p))."""
+    B, Lseq, d = x.shape
+    di, h, pdim, ci = mamba_dims(cfg)
+    n = cfg.ssm_state
+    z = jnp.einsum("bld,dz->blz", x, p["w_z"])
+    xs = jnp.einsum("bld,dz->blz", x, p["w_x"])
+    bc = jnp.einsum("bld,dz->blz", x, p["w_bc"])
+    dt = jnp.einsum("bld,dz->blz", x.astype(jnp.float32), p["w_dt"])
+    xs = jax.nn.silu(_causal_conv_full(xs, p["conv_x_w"], p["conv_x_b"])
+                     .astype(jnp.float32)).astype(x.dtype)
+    bc = jax.nn.silu(_causal_conv_full(bc, p["conv_bc_w"], p["conv_bc_b"])
+                     .astype(jnp.float32)).astype(x.dtype)
+    Bm, Cm = jnp.split(bc, [n], axis=-1)
+    dt = jax.nn.softplus(dt + p["dt_bias"])                        # (B,L,h)
+    A = -jnp.exp(p["A_log"])                                       # (h,)
+    dA = dt * A                                                    # (B,L,h)
+    xh = xs.reshape(B, Lseq, h, pdim)
+    xdt = xh * dt[..., None].astype(x.dtype)
+    y, state = ssd_chunked(xdt, dA, Bm, Cm, cfg.ssm_chunk, h0)
+    y = y + xh * p["D"][None, None, :, None].astype(x.dtype)
+    y = y.reshape(B, Lseq, di)
+    y = _gated_rmsnorm(y, z, p["norm"])
+    out = jnp.einsum("bld,dz->blz", y, p["out_proj"])
+    return out, state
+
+
+def mamba_block_step(x1: jax.Array, p: Params, cfg: ArchConfig,
+                     ssm_state: jax.Array, conv_state: jax.Array):
+    """x1: (B, 1, d) one token. Returns (y (B,1,d), (ssm_state, conv_state)).
+
+    conv_state: (B, W-1, di + 2n) — the x and BC conv tails concatenated.
+    """
+    B = x1.shape[0]
+    di, h, pdim, ci = mamba_dims(cfg)
+    n = cfg.ssm_state
+    x0 = x1[:, 0, :]
+    z = jnp.einsum("bd,dz->bz", x0, p["w_z"])
+    xs = jnp.einsum("bd,dz->bz", x0, p["w_x"])
+    bc = jnp.einsum("bd,dz->bz", x0, p["w_bc"])
+    dt = jnp.einsum("bd,dz->bz", x0.astype(jnp.float32), p["w_dt"])
+    cs_x, cs_bc = conv_state[..., :di], conv_state[..., di:]
+    xs, cs_x = _conv_step(xs, cs_x, p["conv_x_w"], p["conv_x_b"])
+    bc, cs_bc = _conv_step(bc, cs_bc, p["conv_bc_w"], p["conv_bc_b"])
+    conv_state = jnp.concatenate([cs_x, cs_bc], axis=-1)
+    xs = jax.nn.silu(xs.astype(jnp.float32)).astype(x1.dtype)
+    bc = jax.nn.silu(bc.astype(jnp.float32)).astype(x1.dtype)
+    Bm, Cm = jnp.split(bc, [n], axis=-1)
+    dt = jax.nn.softplus(dt + p["dt_bias"])                        # (B,h)
+    A = -jnp.exp(p["A_log"])
+    dA = dt * A
+    xh = xs.reshape(B, h, pdim)
+    y, ssm_state = ssd_step(xh * dt[..., None].astype(x1.dtype), dA, Bm, Cm,
+                            ssm_state)
+    y = y + xh * p["D"][None, :, None].astype(x1.dtype)
+    y = y.reshape(B, di)
+    y = _gated_rmsnorm(y[:, None, :], z[:, None, :], p["norm"])
+    out = jnp.einsum("bld,dz->blz", y, p["out_proj"])
+    return out, (ssm_state, conv_state)
+
+
+# NOTE: mamba_block_full returns only the ssm state; the conv tail needed to
+# continue decoding after a prefill is recomputed here (last W-1 conv inputs).
+def mamba_conv_tail(x: jax.Array, p: Params, cfg: ArchConfig) -> jax.Array:
+    tail = x[:, -(CONV_WIDTH - 1):, :]
+    xs = jnp.einsum("bld,dz->blz", tail, p["w_x"])
+    bc = jnp.einsum("bld,dz->blz", tail, p["w_bc"])
+    return jnp.concatenate([xs, bc], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Zamba2: grouped hybrid stack
+
+
+def _zamba_groups(cfg: ArchConfig) -> Tuple[int, int]:
+    """(n_groups, n_tail): layers = n_groups*shared_attn_every + n_tail."""
+    g = cfg.n_layers // cfg.shared_attn_every
+    return g, cfg.n_layers - g * cfg.shared_attn_every
+
+
+def _shared_block(x, shared, cfg: ArchConfig, positions=None):
+    h = L.rmsnorm(x, shared["ln1"])
+    q, k, v = L.attn_qkv(h, shared["attn"])
+    if positions is None:
+        positions = jnp.arange(x.shape[1])[None, :]
+    q = L.apply_rope(q, positions, cfg.rope_theta)
+    k = L.apply_rope(k, positions, cfg.rope_theta)
+    o = L.attention_core(q, k, v, causal=True, impl=cfg.attention_impl)
+    x = x + L.attn_out(o, shared["attn"])
+    x = x + L.swiglu(L.rmsnorm(x, shared["ln2"]), shared["mlp"])
+    return x, (k, v)
+
+
+def _split_mamba_stack(params: Params, cfg: ArchConfig):
+    g, tail = _zamba_groups(cfg)
+    per = cfg.shared_attn_every
+    grouped = jax.tree.map(
+        lambda a: a[: g * per].reshape((g, per) + a.shape[1:]), params["mamba"])
+    tail_p = jax.tree.map(lambda a: a[g * per:], params["mamba"])
+    return grouped, tail_p, g, tail
+
+
+def forward_zamba(cfg: ArchConfig, params: Params, tokens: jax.Array):
+    dtype = jnp.dtype(cfg.dtype)
+    x = L.embed_tokens(tokens, params["embed"], dtype)
+    grouped, tail_p, g, tail = _split_mamba_stack(params, cfg)
+    shared = params["shared"]
+
+    def group_body(carry, blks):
+        def inner(c, blk):
+            out, _ = mamba_block_full(c, blk, cfg)
+            return L.constrain_residual(c + out), None
+        carry, _ = lax.scan(_maybe_remat(inner, cfg), carry, blks)
+        carry, _ = _shared_block(carry, shared, cfg)
+        return carry, None
+
+    x, _ = lax.scan(_maybe_remat(group_body, cfg), x, grouped)
+
+    def tail_body(c, blk):
+        out, _ = mamba_block_full(c, blk, cfg)
+        return L.constrain_residual(c + out), None
+    x, _ = lax.scan(_maybe_remat(tail_body, cfg), x, tail_p)
+
+    x = L.rmsnorm(x, params["ln_f"])
+    return L.lm_logits(x, params["head"])
+
+
+def prefill_zamba(cfg: ArchConfig, params: Params, tokens: jax.Array):
+    dtype = jnp.dtype(cfg.dtype)
+    B, S = tokens.shape
+    positions = jnp.arange(S)[None, :]
+    x = L.embed_tokens(tokens, params["embed"], dtype)
+    grouped, tail_p, g, tail = _split_mamba_stack(params, cfg)
+    shared = params["shared"]
+
+    def group_body(carry, blks):
+        def inner(c, blk):
+            out, state = mamba_block_full(c, blk, cfg)
+            return L.constrain_residual(c + out), \
+                (state, mamba_conv_tail(c, blk, cfg))
+        carry, (states, convs) = lax.scan(_maybe_remat(inner, cfg), carry, blks)
+        carry, (k, v) = _shared_block(carry, shared, cfg, positions)
+        return carry, (states, convs, k, v)
+
+    x, (g_states, g_convs, ks, vs) = lax.scan(_maybe_remat(group_body, cfg),
+                                              x, grouped)
+
+    def tail_body(c, blk):
+        out, state = mamba_block_full(c, blk, cfg)
+        return c + out, (state, mamba_conv_tail(c, blk, cfg))
+    x, (t_states, t_convs) = lax.scan(tail_body, x, tail_p)
+
+    x = L.rmsnorm(x, params["ln_f"])
+    logits = L.lm_logits(x[:, -1:], params["head"])
+    di, h, pdim, ci = mamba_dims(cfg)
+    cache = {
+        "ssm": jnp.concatenate(
+            [g_states.reshape((-1,) + g_states.shape[2:]), t_states], axis=0),
+        "conv": jnp.concatenate(
+            [g_convs.reshape((-1,) + g_convs.shape[2:]), t_convs], axis=0),
+        "k": ks, "v": vs,  # (g, B, S, K, D) shared-block KV per invocation
+    }
+    return logits, cache
+
+
+def decode_zamba(cfg: ArchConfig, params: Params, cache, token: jax.Array,
+                 pos):
+    dtype = jnp.dtype(cfg.dtype)
+    B = token.shape[0]
+    x = L.embed_tokens(token, params["embed"], dtype)
+    grouped, tail_p, g, tail = _split_mamba_stack(params, cfg)
+    shared = params["shared"]
+    per = cfg.shared_attn_every
+
+    ssm = cache["ssm"]
+    conv = cache["conv"]
+    g_ssm = ssm[: g * per].reshape((g, per) + ssm.shape[1:])
+    t_ssm = ssm[g * per:]
+    g_conv = conv[: g * per].reshape((g, per) + conv.shape[1:])
+    t_conv = conv[g * per:]
+
+    def shared_step(c, kc, vc):
+        h = L.rmsnorm(c, shared["ln1"])
+        q, k, v = L.attn_qkv(h, shared["attn"])
+        positions = jnp.full((B, 1), pos)
+        q = L.apply_rope(q, positions, cfg.rope_theta)
+        k = L.apply_rope(k, positions, cfg.rope_theta)
+        kc, vc = KV.update_layer_cache(kc, vc, k, v, pos)
+        o = L.attention_core(q, kc, vc, causal=False, kv_valid_len=pos + 1,
+                             impl=cfg.attention_impl)
+        c = c + L.attn_out(o, shared["attn"])
+        c = c + L.swiglu(L.rmsnorm(c, shared["ln2"]), shared["mlp"])
+        return c, kc, vc
+
+    def group_body(carry, xs):
+        blks, s_states, c_states, kc, vc = xs
+
+        def inner(c, layer_xs):
+            blk, st, cv = layer_xs
+            out, (st, cv) = mamba_block_step(c, blk, cfg, st, cv)
+            return c + out, (st, cv)
+
+        carry, (s_states, c_states) = lax.scan(
+            inner, carry, (blks, s_states, c_states))
+        carry, kc, vc = shared_step(carry, kc, vc)
+        return carry, (s_states, c_states, kc, vc)
+
+    x, (g_ssm, g_conv, ks, vs) = lax.scan(
+        group_body, x, (grouped, g_ssm, g_conv, cache["k"], cache["v"]))
+
+    def tail_body(c, xs):
+        blk, st, cv = xs
+        out, (st, cv) = mamba_block_step(c, blk, cfg, st, cv)
+        return c + out, (st, cv)
+    x, (t_ssm, t_conv) = lax.scan(tail_body, x, (tail_p, t_ssm, t_conv))
+
+    x = L.rmsnorm(x, params["ln_f"])
+    logits = L.lm_logits(x, params["head"])
+    cache = {
+        "ssm": jnp.concatenate(
+            [g_ssm.reshape((-1,) + g_ssm.shape[2:]), t_ssm], axis=0),
+        "conv": jnp.concatenate(
+            [g_conv.reshape((-1,) + g_conv.shape[2:]), t_conv], axis=0),
+        "k": ks, "v": vs,
+    }
+    return logits, cache
+
+
+def zamba_cache_shapes(cfg: ArchConfig, batch: int, max_len: int):
+    """ShapeDtypeStructs for the zamba decode cache."""
+    di, h, pdim, ci = mamba_dims(cfg)
+    g, tail = _zamba_groups(cfg)
+    dtype = jnp.dtype(cfg.dtype)
+    return {
+        "ssm": jax.ShapeDtypeStruct(
+            (cfg.n_layers, batch, h, cfg.ssm_state, pdim), dtype),
+        "conv": jax.ShapeDtypeStruct(
+            (cfg.n_layers, batch, CONV_WIDTH - 1, ci), dtype),
+        "k": jax.ShapeDtypeStruct(
+            (g, batch, max_len, cfg.n_kv_heads, cfg.head_dim), dtype),
+        "v": jax.ShapeDtypeStruct(
+            (g, batch, max_len, cfg.n_kv_heads, cfg.head_dim), dtype),
+    }

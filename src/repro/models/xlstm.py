@@ -1,0 +1,405 @@
+"""xLSTM backbone [arXiv:2405.04517]: chunkwise-parallel mLSTM blocks with one
+sequential sLSTM block every ``slstm_every`` layers.
+
+mLSTM: matrix memory C (dk x dv per head) with exponential input gating and a
+log-sigmoid forget gate; the chunkwise form stabilizes the exponentials with a
+running max (carried across chunks), mirroring the recurrent stabilizer m_t of
+the paper. A recurrent ``mlstm_recurrent`` oracle is kept for property tests.
+
+sLSTM: scalar memory with hidden-state-dependent (block-diagonal per head)
+recurrence — inherently sequential, computed with lax.scan over time.
+
+Both states are O(1) in sequence length, so decode at 524k context is a
+fixed-size state update (the sub-quadratic property gating ``long_500k``).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models.transformer import _maybe_remat
+
+Params = Dict[str, Any]
+
+
+def xlstm_groups(cfg: ArchConfig) -> Tuple[int, int]:
+    """(n_groups, m_per_group): layers = n_groups * (m_per_group + 1)."""
+    per = cfg.slstm_every
+    assert cfg.n_layers % per == 0
+    return cfg.n_layers // per, per - 1
+
+
+# ---------------------------------------------------------------------------
+# init
+
+
+def _mlstm_stack_init(rng, n: int, cfg: ArchConfig, dtype) -> Params:
+    d = cfg.d_model
+    H = cfg.n_heads
+    ks = jax.random.split(rng, 6)
+    return {
+        "w_up": L.dense_init(ks[0], (n, d, 2 * d), dtype, in_axis=1),
+        "wq": L.dense_init(ks[1], (n, d, d), dtype, in_axis=1),
+        "wk": L.dense_init(ks[2], (n, d, d), dtype, in_axis=1),
+        "wv": L.dense_init(ks[3], (n, d, d), dtype, in_axis=1),
+        "w_gate": L.dense_init(ks[4], (n, d, 2 * H), jnp.float32, in_axis=1),
+        "gate_bias": jnp.concatenate(
+            [jnp.zeros((n, H), jnp.float32),          # input gate bias
+             3.0 * jnp.ones((n, H), jnp.float32)],    # forget gate bias
+            axis=-1),
+        "w_down": L.dense_init(ks[5], (n, d, d), dtype, in_axis=1),
+        "ln": jnp.zeros((n, d), dtype),
+    }
+
+
+def _slstm_stack_init(rng, n: int, cfg: ArchConfig, dtype) -> Params:
+    d = cfg.d_model
+    H = cfg.n_heads
+    hd = d // H
+    f_ff = max(128, int(d * 4 / 3) // 64 * 64)
+    ks = jax.random.split(rng, 7)
+    return {
+        "w_in": L.dense_init(ks[0], (n, d, 4 * d), dtype, in_axis=1),
+        # recurrent block-diagonal weights, one (hd, hd) block per head/gate
+        "r": L.dense_init(ks[1], (n, 4, H, hd, hd), jnp.float32, in_axis=-2),
+        "bias": jnp.concatenate(
+            [jnp.zeros((n, 2 * d), jnp.float32),
+             3.0 * jnp.ones((n, d), jnp.float32),     # forget bias
+             jnp.zeros((n, d), jnp.float32)], axis=-1),
+        "ln": jnp.zeros((n, d), dtype),
+        "ln2": jnp.zeros((n, d), dtype),
+        "ffn": {
+            "w_gate": L.dense_init(ks[2], (n, d, f_ff), dtype, in_axis=1),
+            "w_up": L.dense_init(ks[3], (n, d, f_ff), dtype, in_axis=1),
+            "w_down": L.dense_init(ks[4], (n, f_ff, d), dtype, in_axis=1),
+        },
+    }
+
+
+def init_xlstm(cfg: ArchConfig, rng) -> Params:
+    dtype = jnp.dtype(cfg.param_dtype)
+    g, m_per = xlstm_groups(cfg)
+    ke, km, ksl, kh = jax.random.split(rng, 4)
+    return {
+        "embed": L.embed_init(ke, (cfg.vocab, cfg.d_model), dtype),
+        "mlstm": _mlstm_stack_init(km, g * m_per, cfg, dtype),
+        "slstm": _slstm_stack_init(ksl, g, cfg, dtype),
+        "ln_f": jnp.zeros((cfg.d_model,), dtype),
+        "head": L.embed_init(kh, (cfg.vocab, cfg.d_model), dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# mLSTM cell — chunkwise parallel form
+
+
+def mlstm_chunked(q, k, v, log_i, log_f, chunk: int, state=None):
+    """q,k,v: (B, S, H, D); log_i/log_f: (B, S, H) f32.
+
+    Returns (h (B,S,H,D), state=(C_hat (B,H,D,D), n_hat (B,H,D), m (B,H))).
+    Stabilized: true C_t = exp(m_t) * C_hat_t.
+    """
+    B, S, H, D = q.shape
+    assert S % chunk == 0
+    nc = S // chunk
+    scale = D ** -0.5
+    qc = q.reshape(B, nc, chunk, H, D)
+    kc = k.reshape(B, nc, chunk, H, D) * scale
+    vc = v.reshape(B, nc, chunk, H, D)
+    li = log_i.reshape(B, nc, chunk, H).astype(jnp.float32)
+    lf = log_f.reshape(B, nc, chunk, H).astype(jnp.float32)
+
+    if state is None:
+        C0 = jnp.zeros((B, H, D, D), jnp.float32)
+        n0 = jnp.zeros((B, H, D), jnp.float32)
+        m0 = jnp.full((B, H), -1e30, jnp.float32)
+    else:
+        C0, n0, m0 = state
+
+    def chunk_body(carry, inp):
+        # Derivation: with csf_t the inclusive in-chunk cumsum of log_f and
+        # a_j = log_i_j - csf_j, the true state satisfies
+        #   C_t = exp(csf_t) [ sum_{j<=t} exp(a_j) k_j v_j^T + exp(m0) C_hat0 ]
+        # and the recurrent stabilizer is m_t = csf_t + mt~ with
+        #   mt~ = max(m0, cummax_{j<=t} a_j)     (m0 = carried FULL m).
+        # All hat-quantities below are true values divided by exp(m_t).
+        C_hat, n_hat, m_prev = carry
+        qj, kj, vj, lij, lfj = inp      # (B, Q, H, D) / (B, Q, H)
+        csf = jnp.cumsum(lfj, axis=1)                       # (B,Q,H) inclusive
+        a = lij - csf                                       # (B,Q,H)
+        run_amax = lax.cummax(a, axis=1)
+        m_loc = jnp.maximum(run_amax, m_prev[:, None, :])   # mt~ (B,Q,H)
+        # intra-chunk decay-scaled scores
+        dmat = jnp.exp(a[:, None, :, :] - m_loc[:, :, None, :])  # (B,Qi,Qj,H)
+        mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+        dmat = jnp.where(mask[None, :, :, None], dmat, 0.0)
+        scores = jnp.einsum("bihd,bjhd->bijh", qj, kj,
+                            preferred_element_type=jnp.float32)
+        w = scores * dmat                                   # (B,Qi,Qj,H)
+        num_intra = jnp.einsum("bijh,bjhd->bihd", w, vj.astype(jnp.float32))
+        # denominator uses k (not v): n.q = sum_j weight_j (k_j.q_t)
+        den_intra = jnp.sum(w, axis=2)                      # (B,Qi,H)
+        # inter-chunk contribution
+        inter_w = jnp.exp(m_prev[:, None, :] - m_loc)       # (B,Q,H)
+        qf = qj.astype(jnp.float32)
+        num_inter = jnp.einsum("bihd,bhde->bihe", qf, C_hat) * inter_w[..., None]
+        den_inter = jnp.einsum("bihd,bhd->bih", qf, n_hat) * inter_w
+        num = num_intra + num_inter
+        den = den_intra + den_inter
+        # h = C q / max(|n.q|, 1) in true space == hat-space with exp(-m_full)
+        m_full = csf + m_loc
+        denom = jnp.maximum(jnp.abs(den), jnp.exp(-m_full))
+        h = num / denom[..., None]
+        # --- end-of-chunk state update (hat-space w.r.t. m_tilde, then carry
+        # the FULL m = m_tilde + csf_total so the next chunk is consistent)
+        m_tilde = jnp.maximum(run_amax[:, -1, :], m_prev)
+        wght = jnp.exp(a - m_tilde[:, None, :])             # (B,Q,H)
+        kf = kj.astype(jnp.float32)
+        C_new = (C_hat * jnp.exp(m_prev - m_tilde)[..., None, None]
+                 + jnp.einsum("bjh,bjhd,bjhe->bhde", wght, kf,
+                              vj.astype(jnp.float32)))
+        n_new = (n_hat * jnp.exp(m_prev - m_tilde)[..., None]
+                 + jnp.einsum("bjh,bjhd->bhd", wght, kf))
+        m_carry = m_tilde + csf[:, -1, :]
+        return (C_new, n_new, m_carry), h.astype(q.dtype)
+
+    (Cf, nf, mf), hs = lax.scan(
+        chunk_body, (C0, n0, m0),
+        (qc.transpose(1, 0, 2, 3, 4), kc.transpose(1, 0, 2, 3, 4),
+         vc.transpose(1, 0, 2, 3, 4), li.transpose(1, 0, 2, 3),
+         lf.transpose(1, 0, 2, 3)))
+    h = hs.transpose(1, 0, 2, 3, 4).reshape(B, S, H, D)
+    return h, (Cf, nf, mf)
+
+
+def mlstm_recurrent(q, k, v, log_i, log_f, state=None):
+    """Step-by-step oracle (and decode path). Same shapes as mlstm_chunked."""
+    B, S, H, D = q.shape
+    scale = D ** -0.5
+    if state is None:
+        C0 = jnp.zeros((B, H, D, D), jnp.float32)
+        n0 = jnp.zeros((B, H, D), jnp.float32)
+        m0 = jnp.full((B, H), -1e30, jnp.float32)
+        state = (C0, n0, m0)
+
+    def step(carry, inp):
+        C, n, m = carry
+        qt, kt, vt, lit, lft = inp
+        qt = qt.astype(jnp.float32)
+        kt = kt.astype(jnp.float32) * scale
+        vt = vt.astype(jnp.float32)
+        m_new = jnp.maximum(lft + m, lit)                   # (B,H)
+        fw = jnp.exp(lft + m - m_new)
+        iw = jnp.exp(lit - m_new)
+        C = C * fw[..., None, None] + iw[..., None, None] * (
+            kt[..., :, None] * vt[..., None, :])
+        n = n * fw[..., None] + iw[..., None] * kt
+        num = jnp.einsum("bhd,bhde->bhe", qt, C)
+        den = jnp.einsum("bhd,bhd->bh", qt, n)
+        denom = jnp.maximum(jnp.abs(den), jnp.exp(-m_new))
+        h = num / denom[..., None]
+        return (C, n, m_new), h
+
+    (Cf, nf, mf), hs = lax.scan(
+        step, state,
+        (q.transpose(1, 0, 2, 3), k.transpose(1, 0, 2, 3),
+         v.transpose(1, 0, 2, 3),
+         log_i.astype(jnp.float32).transpose(1, 0, 2),
+         log_f.astype(jnp.float32).transpose(1, 0, 2)))
+    return hs.transpose(1, 0, 2, 3).astype(q.dtype), (Cf, nf, mf)
+
+
+def _mlstm_gates(xm, blk):
+    H = blk["gate_bias"].shape[-1] // 2
+    raw = jnp.einsum("bsd,dg->bsg", xm.astype(jnp.float32), blk["w_gate"])
+    raw = raw + blk["gate_bias"][None, None, :]
+    log_i, f_raw = raw[..., :H], raw[..., H:]
+    log_f = jax.nn.log_sigmoid(f_raw)
+    return log_i, log_f
+
+
+def mlstm_block(x, blk, cfg: ArchConfig, state=None, mode="chunked"):
+    """x: (B, S, d). Returns (y, new_state)."""
+    B, S, d = x.shape
+    H, hd = cfg.n_heads, cfg.head_dim
+    h_in = L.rmsnorm(x, blk["ln"])
+    up = jnp.einsum("bsd,dz->bsz", h_in, blk["w_up"])
+    xm, z = jnp.split(up, 2, axis=-1)
+    q = jnp.einsum("bsd,de->bse", xm, blk["wq"]).reshape(B, S, H, hd)
+    k = jnp.einsum("bsd,de->bse", xm, blk["wk"]).reshape(B, S, H, hd)
+    v = jnp.einsum("bsd,de->bse", xm, blk["wv"]).reshape(B, S, H, hd)
+    log_i, log_f = _mlstm_gates(xm, blk)
+    if mode == "chunked":
+        h, new_state = mlstm_chunked(q, k, v, log_i, log_f,
+                                     min(cfg.ssm_chunk, S), state)
+    else:
+        h, new_state = mlstm_recurrent(q, k, v, log_i, log_f, state)
+    h = h.reshape(B, S, d) * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    y = jnp.einsum("bsd,de->bse", h, blk["w_down"])
+    return y, new_state
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+
+
+def slstm_scan(x_gates, r, bias, H: int, state=None):
+    """x_gates: (B, S, 4d) pre-activations (z,i,f,o order, each d wide).
+
+    r: (4, H, hd, hd) recurrent block-diag weights. Returns (h (B,S,d), state).
+    """
+    B, S, G4 = x_gates.shape
+    d = G4 // 4
+    hd = d // H
+    if state is None:
+        zeros = jnp.zeros((B, d), jnp.float32)
+        state = (zeros, zeros, zeros + 1e-6, jnp.full((B, d), -1e30))
+
+    def step(carry, xt):
+        h_prev, c_prev, n_prev, m_prev = carry
+        hp = h_prev.reshape(B, H, hd)
+        rec = jnp.einsum("bhd,ghde->bghe", hp, r).reshape(B, 4 * d)
+        pre = xt.astype(jnp.float32) + bias + rec
+        z_, i_, f_, o_ = jnp.split(pre, 4, axis=-1)
+        z_ = jnp.tanh(z_)
+        o_ = jax.nn.sigmoid(o_)
+        log_f = jax.nn.log_sigmoid(f_)
+        m_new = jnp.maximum(log_f + m_prev, i_)
+        fw = jnp.exp(log_f + m_prev - m_new)
+        iw = jnp.exp(i_ - m_new)
+        c = fw * c_prev + iw * z_
+        n = fw * n_prev + iw
+        h = o_ * c / jnp.maximum(n, 1e-6)
+        return (h, c, n, m_new), h
+
+    (hf, cf, nf, mf), hs = lax.scan(step, state, x_gates.transpose(1, 0, 2))
+    return hs.transpose(1, 0, 2), (hf, cf, nf, mf)
+
+
+def slstm_block(x, blk, cfg: ArchConfig, state=None):
+    """x: (B, S, d). Returns (y, new_state)."""
+    B, S, d = x.shape
+    h_in = L.rmsnorm(x, blk["ln"])
+    gates = jnp.einsum("bsd,dg->bsg", h_in, blk["w_in"])
+    h, new_state = slstm_scan(gates, blk["r"], blk["bias"], cfg.n_heads, state)
+    y = x + h.astype(x.dtype)
+    y = y + L.swiglu(L.rmsnorm(y, blk["ln2"]), blk["ffn"])
+    return y - x, new_state  # residual added by the caller
+
+
+# ---------------------------------------------------------------------------
+# full model
+
+
+def _group_stacks(params: Params, cfg: ArchConfig):
+    g, m_per = xlstm_groups(cfg)
+    m_grouped = jax.tree.map(
+        lambda a: a.reshape((g, m_per) + a.shape[1:]), params["mlstm"])
+    return m_grouped, params["slstm"], g, m_per
+
+
+def forward_xlstm(cfg: ArchConfig, params: Params, tokens: jax.Array,
+                  mode="chunked"):
+    dtype = jnp.dtype(cfg.dtype)
+    x = L.embed_tokens(tokens, params["embed"], dtype)
+    m_grouped, s_stack, g, m_per = _group_stacks(params, cfg)
+
+    def group_body(carry, xs):
+        m_blks, s_blk = xs
+
+        def inner(c, blk):
+            y, _ = mlstm_block(c, blk, cfg, mode=mode)
+            return L.constrain_residual(c + y), None
+
+        carry, _ = lax.scan(_maybe_remat(inner, cfg), carry, m_blks)
+        y, _ = slstm_block(carry, s_blk, cfg)
+        return L.constrain_residual(carry + y), None
+
+    x, _ = lax.scan(_maybe_remat(group_body, cfg), x, (m_grouped, s_stack))
+    x = L.rmsnorm(x, params["ln_f"])
+    return L.lm_logits(x, params["head"])
+
+
+def prefill_xlstm(cfg: ArchConfig, params: Params, tokens: jax.Array):
+    dtype = jnp.dtype(cfg.dtype)
+    x = L.embed_tokens(tokens, params["embed"], dtype)
+    m_grouped, s_stack, g, m_per = _group_stacks(params, cfg)
+
+    def group_body(carry, xs):
+        m_blks, s_blk = xs
+
+        def inner(c, blk):
+            y, st = mlstm_block(c, blk, cfg)
+            return L.constrain_residual(c + y), st
+
+        carry, m_states = lax.scan(_maybe_remat(inner, cfg), carry, m_blks)
+        y, s_state = slstm_block(carry, s_blk, cfg)
+        return carry + y, (m_states, s_state)
+
+    x, (m_states, s_states) = lax.scan(group_body, x, (m_grouped, s_stack))
+    x = L.rmsnorm(x, params["ln_f"])
+    logits = L.lm_logits(x[:, -1:], params["head"])
+    flat_m = jax.tree.map(
+        lambda a: a.reshape((-1,) + a.shape[2:]), m_states)  # (g*m_per, ...)
+    cache = {"mC": flat_m[0], "mn": flat_m[1], "mm": flat_m[2],
+             "sh": s_states[0], "sc": s_states[1],
+             "sn": s_states[2], "sm": s_states[3]}
+    return logits, cache
+
+
+def decode_xlstm(cfg: ArchConfig, params: Params, cache, token: jax.Array,
+                 pos):
+    del pos  # state-based: position does not enter the recurrence
+    dtype = jnp.dtype(cfg.dtype)
+    x = L.embed_tokens(token, params["embed"], dtype)
+    m_grouped, s_stack, g, m_per = _group_stacks(params, cfg)
+    mC = cache["mC"].reshape((g, m_per) + cache["mC"].shape[1:])
+    mn = cache["mn"].reshape((g, m_per) + cache["mn"].shape[1:])
+    mm = cache["mm"].reshape((g, m_per) + cache["mm"].shape[1:])
+
+    def group_body(carry, xs):
+        m_blks, s_blk, C_, n_, m_, sh, sc, sn, sm = xs
+
+        def inner(c, layer_xs):
+            blk, Ci, ni, mi = layer_xs
+            y, st = mlstm_block(c, blk, cfg, state=(Ci, ni, mi),
+                                mode="recurrent")
+            return c + y, st
+
+        carry, (C_, n_, m_) = lax.scan(inner, carry, (m_blks, C_, n_, m_))
+        y, (sh, sc, sn, sm) = slstm_block(carry, s_blk, cfg,
+                                          state=(sh, sc, sn, sm))
+        return carry + y, (C_, n_, m_, sh, sc, sn, sm)
+
+    x, (mC, mn, mm, sh, sc, sn, sm) = lax.scan(
+        group_body, x, (m_grouped, s_stack, mC, mn, mm,
+                        cache["sh"], cache["sc"], cache["sn"], cache["sm"]))
+    x = L.rmsnorm(x, params["ln_f"])
+    logits = L.lm_logits(x, params["head"])
+    cache = {"mC": mC.reshape((-1,) + mC.shape[2:]),
+             "mn": mn.reshape((-1,) + mn.shape[2:]),
+             "mm": mm.reshape((-1,) + mm.shape[2:]),
+             "sh": sh, "sc": sc, "sn": sn, "sm": sm}
+    return logits, cache
+
+
+def xlstm_cache_shapes(cfg: ArchConfig, batch: int, max_len: int):
+    del max_len  # state size is independent of context length
+    g, m_per = xlstm_groups(cfg)
+    n_m = g * m_per
+    d, H, hd = cfg.d_model, cfg.n_heads, cfg.head_dim
+    f32 = jnp.float32
+    return {
+        "mC": jax.ShapeDtypeStruct((n_m, batch, H, hd, hd), f32),
+        "mn": jax.ShapeDtypeStruct((n_m, batch, H, hd), f32),
+        "mm": jax.ShapeDtypeStruct((n_m, batch, H), f32),
+        "sh": jax.ShapeDtypeStruct((g, batch, d), f32),
+        "sc": jax.ShapeDtypeStruct((g, batch, d), f32),
+        "sn": jax.ShapeDtypeStruct((g, batch, d), f32),
+        "sm": jax.ShapeDtypeStruct((g, batch, d), f32),
+    }

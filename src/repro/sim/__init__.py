@@ -1,0 +1,2 @@
+from repro.sim.clock import Clock, EventLoop, RealClock  # noqa: F401
+from repro.sim.hardware import HARDWARE, HardwareSpec    # noqa: F401

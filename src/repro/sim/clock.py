@@ -1,0 +1,69 @@
+"""Clock abstraction: the control plane is written against ``Clock`` so the
+same code runs under a discrete-event virtual clock (cluster-scale
+experiments) or wall time (real execution on host)."""
+from __future__ import annotations
+
+import heapq
+import itertools
+import time
+from typing import Callable, List, Optional, Tuple
+
+
+class Clock:
+    def now(self) -> float:
+        raise NotImplementedError
+
+
+class RealClock(Clock):
+    def __init__(self):
+        self._t0 = time.monotonic()
+
+    def now(self) -> float:
+        return time.monotonic() - self._t0
+
+
+class EventLoop(Clock):
+    """Deterministic discrete-event virtual clock.
+
+    ``schedule(delay, fn)`` / ``schedule_at(t, fn)``; ``run_until(t)`` fires
+    events in time order (FIFO for ties). Periodic tasks re-schedule
+    themselves.
+    """
+
+    def __init__(self):
+        self._t = 0.0
+        self._heap: List[Tuple[float, int, Callable]] = []
+        self._counter = itertools.count()
+
+    def now(self) -> float:
+        return self._t
+
+    def schedule_at(self, t: float, fn: Callable) -> None:
+        heapq.heappush(self._heap, (max(t, self._t), next(self._counter), fn))
+
+    def schedule(self, delay: float, fn: Callable) -> None:
+        self.schedule_at(self._t + delay, fn)
+
+    def every(self, period: float, fn: Callable, jitter: float = 0.0,
+              stop: Optional[Callable[[], bool]] = None) -> None:
+        def tick():
+            if stop is not None and stop():
+                return
+            fn()
+            self.schedule(period, tick)
+        self.schedule(period + jitter, tick)
+
+    def run_until(self, t_end: float) -> None:
+        while self._heap and self._heap[0][0] <= t_end:
+            t, _, fn = heapq.heappop(self._heap)
+            self._t = t
+            fn()
+        self._t = max(self._t, t_end)
+
+    def run_all(self, limit: int = 10_000_000) -> None:
+        n = 0
+        while self._heap and n < limit:
+            t, _, fn = heapq.heappop(self._heap)
+            self._t = t
+            fn()
+            n += 1

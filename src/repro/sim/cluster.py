@@ -1,0 +1,58 @@
+"""Cluster assembly helpers: wire up loop + metadata store + repository +
+master + workers and register the assigned architecture zoo."""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+from repro.configs.base import ArchConfig
+from repro.core.api import INFaaS
+from repro.core.master import Master, MasterConfig
+from repro.core.metadata import MetadataStore
+from repro.core.repository import ModelRepository
+from repro.sim.clock import EventLoop
+
+
+def serving_archs() -> List[ArchConfig]:
+    """Archs with at least one variant on standard worker hardware
+    (cpu-host / tpu-v5e-1); the giants that only fit multi-chip slices are
+    exercised through the multi-pod dry-run instead."""
+    from repro.configs.registry import ARCHS
+    from repro.core import profiler as prof
+    out = []
+    for cfg in ARCHS.values():
+        vs = prof.generate_variants(cfg)
+        if any(v.hardware in ("cpu-host", "tpu-v5e-1") for v in vs):
+            out.append(cfg)
+    return out
+
+
+@dataclasses.dataclass
+class Cluster:
+    loop: EventLoop
+    store: MetadataStore
+    repo: ModelRepository
+    master: Master
+    api: INFaaS
+
+    def run_until(self, t: float) -> None:
+        self.loop.run_until(t)
+
+
+def make_cluster(n_accel: int = 1, n_cpu: int = 0,
+                 archs: Optional[Sequence[ArchConfig]] = None,
+                 autoscale: bool = True,
+                 cfg: Optional[MasterConfig] = None) -> Cluster:
+    loop = EventLoop()
+    store = MetadataStore()
+    repo = ModelRepository()
+    master = Master(store, repo, loop, cfg or MasterConfig(),
+                    autoscale=autoscale)
+    api = INFaaS(master)
+    for cfgA in (archs if archs is not None else serving_archs()):
+        master.register_model(cfgA)
+    for _ in range(n_accel):
+        master.add_worker("accel")
+    for _ in range(n_cpu):
+        master.add_worker("cpu")
+    return Cluster(loop, store, repo, master, api)

@@ -1,0 +1,61 @@
+"""Hardware catalog + roofline latency model (TPU v5e target).
+
+The profiler derives per-variant latency curves from these specs; the
+simulator executes against them; the roofline analysis (launch/roofline.py)
+uses the same constants. Paper mapping (DESIGN.md §2): "hardware platform" =
+host CPU or a TPU v5e slice shape; prices mirror the paper's >=6x GPU/CPU gap
+in chip-second units.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+# --- v5e chip constants (also used by §Roofline) ---
+V5E_PEAK_FLOPS_BF16 = 197e12          # FLOP/s per chip
+V5E_HBM_BW = 819e9                    # B/s per chip
+V5E_ICI_BW = 50e9                     # B/s per link
+V5E_HBM_BYTES = 16 * 2**30
+PCIE_LOAD_BW = 12e9                   # host->device weight-load bandwidth
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareSpec:
+    name: str
+    kind: str                 # "cpu" | "accel"
+    chips: int                # accelerator chips (0 for cpu)
+    peak_flops: float         # FLOP/s (aggregate)
+    mem_bw: float             # B/s (aggregate)
+    mem_capacity: float       # bytes available for model weights + buffers
+    load_bw: float            # B/s for loading weights from the repository
+    cost_rate: float          # cost units per second (paper: GPU >= 6x CPU)
+    startup_latency: float    # seconds to provision a fresh worker
+
+
+HARDWARE: Dict[str, HardwareSpec] = {
+    # NOTE: cpu-host describes ONE replica slot (2 of 8 vCPUs), so CPU
+    # replication scales throughput linearly (paper Fig. 4); a host offers
+    # cores/cores_per_replica = 4 such slots and mem_capacity is host-wide.
+    "cpu-host": HardwareSpec(
+        name="cpu-host", kind="cpu", chips=0,
+        peak_flops=0.15e12, mem_bw=20e9, mem_capacity=32 * 2**30,
+        load_bw=1.5e9, cost_rate=1.0, startup_latency=8.0),
+    "tpu-v5e-1": HardwareSpec(
+        name="tpu-v5e-1", kind="accel", chips=1,
+        peak_flops=V5E_PEAK_FLOPS_BF16, mem_bw=V5E_HBM_BW,
+        mem_capacity=V5E_HBM_BYTES, load_bw=PCIE_LOAD_BW,
+        cost_rate=6.0, startup_latency=15.0),
+    "tpu-v5e-4": HardwareSpec(
+        name="tpu-v5e-4", kind="accel", chips=4,
+        peak_flops=4 * V5E_PEAK_FLOPS_BF16, mem_bw=4 * V5E_HBM_BW,
+        mem_capacity=4 * V5E_HBM_BYTES, load_bw=4 * PCIE_LOAD_BW,
+        cost_rate=24.0, startup_latency=20.0),
+}
+
+
+def roofline_latency(flops: float, bytes_moved: float,
+                     hw: HardwareSpec, efficiency: float = 0.6) -> float:
+    """max(compute, memory) time in seconds at a de-rated efficiency."""
+    t_compute = flops / (hw.peak_flops * efficiency)
+    t_memory = bytes_moved / (hw.mem_bw * efficiency)
+    return max(t_compute, t_memory)

@@ -1,0 +1,3 @@
+from repro.training.optimizer import AdamWConfig, adamw_init, adamw_update  # noqa: F401
+from repro.training.train_loop import (TrainConfig, init_train_state,  # noqa: F401
+                                       make_train_step, train)

@@ -1,0 +1,67 @@
+"""Synthetic-but-deterministic data pipeline.
+
+Generates a reproducible token stream per (seed, shard) with next-token
+structure (a noisy linear-congruential language) so the training loss
+actually decreases — enough signal to validate the training substrate
+end-to-end without external datasets. Shards are indexed by data-parallel
+rank, so restarts resume mid-stream deterministically via the step index.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, Optional
+
+import numpy as np
+
+from repro.configs.base import ArchConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    batch: int
+    seq: int
+    seed: int = 0
+    n_shards: int = 1
+    shard: int = 0
+    noise: float = 0.05
+
+
+def _lcg_tokens(rng: np.random.Generator, n: int, vocab: int,
+                noise: float) -> np.ndarray:
+    """x_{t+1} = (a*x_t + c) % vocab, with occasional random resets."""
+    a = 6364136223846793005 % vocab or 1
+    c = 1442695040888963407 % vocab
+    x = np.empty(n, np.int64)
+    x[0] = rng.integers(0, vocab)
+    noise_mask = rng.random(n) < noise
+    rand = rng.integers(0, vocab, n)
+    for t in range(1, n):
+        x[t] = rand[t] if noise_mask[t] else (a * x[t - 1] + c) % vocab
+    return x
+
+
+def batch_at_step(cfg: ArchConfig, dcfg: DataConfig,
+                  step: int) -> Dict[str, np.ndarray]:
+    """Deterministic batch for a global step (restart-safe)."""
+    rng = np.random.default_rng(
+        (dcfg.seed * 1_000_003 + step) * 97 + dcfg.shard)
+    n = dcfg.batch * (dcfg.seq + 1)
+    toks = _lcg_tokens(rng, n, cfg.vocab, dcfg.noise)
+    toks = toks.reshape(dcfg.batch, dcfg.seq + 1)
+    out = {"tokens": toks[:, :-1].astype(np.int32),
+           "targets": toks[:, 1:].astype(np.int32)}
+    if cfg.family == "audio":
+        out["frames"] = rng.standard_normal(
+            (dcfg.batch, dcfg.seq, cfg.d_model)).astype(np.float32)
+    if cfg.family == "vlm":
+        out["image_embeds"] = rng.standard_normal(
+            (dcfg.batch, cfg.n_image_tokens, cfg.d_model)).astype(np.float32)
+    return out
+
+
+def stream(cfg: ArchConfig, dcfg: DataConfig,
+           start_step: int = 0) -> Iterator[Dict[str, np.ndarray]]:
+    step = start_step
+    while True:
+        yield batch_at_step(cfg, dcfg, step)
+        step += 1

@@ -1,0 +1,113 @@
+"""Training loop: jit'd train_step factory (with donation + optional int8
+gradient compression), periodic checkpointing, and crash-restart resume.
+
+``make_train_step`` is also the entry point lowered by the multi-pod dry-run
+for ``train_4k`` shapes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Iterator, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed.checkpoint import CheckpointManager
+from repro.models.model import Model
+from repro.training import data as data_lib
+from repro.training.optimizer import (AdamWConfig, AdamWState, adamw_init,
+                                      adamw_update)
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    opt: AdamWConfig = AdamWConfig()
+    ckpt_every: int = 50
+    ckpt_keep: int = 3
+    log_every: int = 10
+    grad_compression: bool = False   # int8 stochastic-rounding compression
+
+
+def _compress_grads_int8(grads: Any, rng: jax.Array) -> Any:
+    """Simulated gradient compression: quantize to int8 per-leaf scale and
+    dequantize (models the bandwidth/accuracy trade-off of compressed
+    all-reduce; on real multi-host this halves gradient bytes twice over)."""
+    leaves, treedef = jax.tree.flatten(grads)
+    keys = jax.random.split(rng, len(leaves))
+    out = []
+    for g, k in zip(leaves, keys):
+        g32 = g.astype(jnp.float32)
+        scale = jnp.maximum(jnp.max(jnp.abs(g32)), 1e-12) / 127.0
+        noise = jax.random.uniform(k, g.shape, jnp.float32, -0.5, 0.5)
+        q = jnp.clip(jnp.round(g32 / scale + noise), -127, 127)
+        out.append((q * scale).astype(g.dtype))
+    return jax.tree.unflatten(treedef, out)
+
+
+def make_train_step(model: Model, tcfg: TrainConfig = TrainConfig()
+                    ) -> Callable:
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    state = {"params": ..., "opt": AdamWState, "rng": key}
+    """
+
+    def train_step(state: Dict[str, Any], batch: Dict[str, jax.Array]):
+        params, opt_state, rng = state["params"], state["opt"], state["rng"]
+        loss, grads = jax.value_and_grad(model.loss)(params, batch)
+        rng, sub = jax.random.split(rng)
+        if tcfg.grad_compression:
+            grads = _compress_grads_int8(grads, sub)
+        params, opt_state, info = adamw_update(tcfg.opt, grads, opt_state,
+                                               params)
+        new_state = {"params": params, "opt": opt_state, "rng": rng}
+        metrics = {"loss": loss, **info}
+        return new_state, metrics
+
+    return train_step
+
+
+def init_train_state(model: Model, rng: jax.Array) -> Dict[str, Any]:
+    params = model.init(rng)
+    return {"params": params, "opt": adamw_init(params), "rng": rng}
+
+
+def train(model: Model, dcfg: data_lib.DataConfig,
+          steps: int, tcfg: TrainConfig = TrainConfig(),
+          ckpt_dir: Optional[str] = None,
+          fail_at_step: Optional[int] = None,
+          log: Optional[Callable[[str], None]] = None) -> Dict[str, Any]:
+    """Run (or resume) training. ``fail_at_step`` injects a crash for the
+    restart tests. Returns {"state", "losses", "resumed_from"}."""
+    log = log or (lambda s: None)
+    step_fn = jax.jit(make_train_step(model, tcfg), donate_argnums=0)
+    mgr = CheckpointManager(ckpt_dir, keep=tcfg.ckpt_keep) if ckpt_dir \
+        else None
+
+    state = init_train_state(model, jax.random.PRNGKey(dcfg.seed))
+    start = 0
+    resumed_from = None
+    if mgr is not None and mgr.latest_step() is not None:
+        start, state = mgr.restore(like=state)
+        resumed_from = start
+        log(f"resumed from checkpoint at step {start}")
+
+    losses = []
+    for step in range(start, steps):
+        if fail_at_step is not None and step == fail_at_step:
+            raise RuntimeError(f"injected failure at step {step}")
+        batch = {k: jnp.asarray(v)
+                 for k, v in data_lib.batch_at_step(model.cfg, dcfg,
+                                                    step).items()}
+        state, metrics = step_fn(state, batch)
+        loss = float(metrics["loss"])
+        losses.append(loss)
+        if step % tcfg.log_every == 0:
+            log(f"step {step}: loss={loss:.4f} "
+                f"lr={float(metrics['lr']):.2e}")
+        if mgr is not None and (step + 1) % tcfg.ckpt_every == 0:
+            mgr.save(step + 1, state)
+    if mgr is not None:
+        mgr.save(steps, state)
+    return {"state": state, "losses": losses, "resumed_from": resumed_from}

@@ -1,0 +1,134 @@
+"""Unit tests: model-less abstraction, profiler, Algorithm-1 selection,
+decision cache, metadata snapshot/restore."""
+import jax  # noqa: F401  (ensures jax initializes once for the session)
+import numpy as np
+import pytest
+
+from repro.configs.registry import ARCHS
+from repro.core import profiler as prof
+from repro.core.abstraction import Registry
+from repro.core.metadata import InstanceState, MetadataStore
+from repro.core.selection import VariantSelector
+from repro.sim import hardware as HW
+
+
+@pytest.fixture()
+def store():
+    s = MetadataStore()
+    prof.register_all(s.registry, [ARCHS["llama3.2-1b"], ARCHS["yi-9b"],
+                                   ARCHS["whisper-base"]])
+    # one live accel worker, one cpu worker
+    s.upsert_worker("w0", ("cpu-host", "tpu-v5e-1"), 0.0)
+    s.heartbeat("w0", {"cpu-host": 0.1, "tpu-v5e-1": 0.2},
+                {"cpu-host": 0.0, "tpu-v5e-1": 0.0}, 0.0)
+    s.upsert_worker("w1", ("cpu-host",), 0.0)
+    s.heartbeat("w1", {"cpu-host": 0.05}, {"cpu-host": 0.0}, 0.0)
+    return s
+
+
+def test_variant_generation_counts():
+    reg = Registry()
+    n = prof.register_all(reg, list(ARCHS.values()))
+    assert n >= 80, f"variant zoo too small: {n}"
+    # every variant fits its platform
+    for v in reg.variants.values():
+        assert v.profile.peak_memory <= HW.HARDWARE[v.hardware].mem_capacity
+    # the giants have no host-feasible cpu f32 variant
+    big = [v for v in reg.variants.values()
+           if v.arch == "qwen3-moe-235b-a22b" and v.hardware == "cpu-host"]
+    assert not big
+
+
+def test_linear_fit_matches_roofline():
+    cfg = ARCHS["llama3.2-1b"]
+    hw = HW.HARDWARE["tpu-v5e-1"]
+    p = prof.analytic_profile(cfg, hw, "bf16", 8)
+    wl = prof.workload_model(cfg)
+    for b in (1, 4, 8):
+        t_roof = HW.roofline_latency(
+            wl.flops(b), wl.bytes_moved(b, wl.n_total * 2.0), hw, 0.6)
+        assert p.latency(b) == pytest.approx(t_roof, rel=0.35), b
+
+
+def test_int8_variant_faster_at_small_batch():
+    cfg = ARCHS["llama3.2-1b"]
+    hw = HW.HARDWARE["tpu-v5e-1"]
+    p8 = prof.analytic_profile(cfg, hw, "int8", 1)
+    p16 = prof.analytic_profile(cfg, hw, "bf16", 1)
+    assert p8.latency(1) < p16.latency(1)
+
+
+def test_selection_outcome3_load(store):
+    sel = VariantSelector(store)
+    r = sel.select_arch("llama3.2-1b", 1, 0.05)
+    assert r.outcome == "load" and r.variant is not None
+    assert r.worker in ("w0", "w1")
+    # the chosen variant minimizes load+inference among valid ones
+    v = r.variant
+    for w in store.registry.variants_of("llama3.2-1b"):
+        if w.profile.max_batch >= 1 and w.profile.latency(1) <= 0.05 \
+                and sel._worker_for_load(w) is not None:
+            assert (v.profile.load_latency + v.profile.latency(1)) <= \
+                (w.profile.load_latency + w.profile.latency(1)) + 1e-9
+
+
+def test_selection_prefers_running_then_caches(store):
+    sel = VariantSelector(store)
+    # mark one valid variant as running on w0
+    cands = [v for v in store.registry.variants_of("llama3.2-1b")
+             if v.hardware == "tpu-v5e-1"]
+    v = cands[0]
+    store.set_instance(InstanceState(variant=v.name, worker="w0",
+                                     running=True))
+    r1 = sel.select_arch("llama3.2-1b", 1, 1.0)
+    assert r1.outcome == "running" and r1.variant.name == v.name
+    r2 = sel.select_arch("llama3.2-1b", 1, 1.0)
+    assert r2.outcome == "cache" and r2.variant.name == v.name
+    # overload the instance -> cache must not return it
+    inst = store.instance(v.name, "w0")
+    inst.qps = 1e9
+    r3 = sel.select_arch("llama3.2-1b", 1, 1.0)
+    assert r3.outcome != "cache" or r3.variant.name != v.name
+
+
+def test_usecase_selection_respects_accuracy(store):
+    sel = VariantSelector(store)
+    r = sel.select_usecase("text-generation", "openwebtext",
+                           accuracy=0.71, batch=1, latency_slo=None)
+    assert r.variant is not None
+    assert r.variant.arch == "yi-9b"    # only arch above 0.71 registered here
+    r2 = sel.select_usecase("asr", "librispeech", 0.0, 1, None)
+    assert r2.variant.arch == "whisper-base"
+    r3 = sel.select_usecase("text-generation", "openwebtext",
+                            accuracy=0.99, batch=1, latency_slo=None)
+    assert r3.outcome == "reject"
+
+
+def test_variant_validity_batch_and_slo(store):
+    sel = VariantSelector(store)
+    r = sel.select_arch("llama3.2-1b", 64, None)
+    assert r.variant.profile.max_batch >= 64
+
+
+def test_snapshot_restore_roundtrip(store):
+    blob = store.snapshot()
+    restored = MetadataStore.restore(blob)
+    assert set(restored.registry.archs) == set(store.registry.archs)
+    assert set(restored.registry.variants) == set(store.registry.variants)
+    v0 = next(iter(store.registry.variants.values()))
+    v1 = restored.registry.variants[v0.name]
+    assert v1.profile.m == pytest.approx(v0.profile.m)
+    # dynamic state intentionally NOT in the snapshot
+    assert not restored.workers
+
+
+def test_private_model_access(store):
+    from repro.core.abstraction import ModelArchInfo
+    store.registry.add_arch(ModelArchInfo(
+        name="secret", task="text-generation", dataset="openwebtext",
+        accuracy=0.99, submitter="alice", is_private=True,
+        allowed_users=("bob",)))
+    reg = store.registry
+    assert reg.archs["secret"].accessible_by("alice")
+    assert reg.archs["secret"].accessible_by("bob")
+    assert not reg.archs["secret"].accessible_by("eve")

@@ -1,0 +1,146 @@
+"""Pallas kernel validation: interpret-mode sweep over shapes/dtypes against
+the pure-jnp oracles in ``repro.kernels.ref``."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.int8_matmul import int8_matmul
+from repro.kernels.ops import flash_attention_grouped
+
+
+def tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-5, atol=2e-5)
+
+
+def _qkv(rng, B, H, K, S, T, D, dtype):
+    k1, k2, k3 = jax.random.split(rng, 3)
+    q = jax.random.normal(k1, (B, H, S, D), jnp.float32).astype(dtype)
+    k = jax.random.normal(k2, (B, K, T, D), jnp.float32).astype(dtype)
+    v = jax.random.normal(k3, (B, K, T, D), jnp.float32).astype(dtype)
+    return q, k, v
+
+
+FLASH_CASES = [
+    # (B, H, K, S, T, D, causal)
+    (1, 4, 4, 128, 128, 64, True),        # MHA causal
+    (2, 8, 2, 256, 256, 64, True),        # GQA group=4
+    (1, 4, 1, 128, 256, 128, False),      # MQA, rectangular, bidirectional
+    (1, 2, 2, 256, 512, 64, True),        # long KV
+]
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("case", FLASH_CASES)
+def test_flash_attention(case, dtype):
+    B, H, K, S, T, D, causal = case
+    rng = jax.random.PRNGKey(hash(case) % 2**31)
+    q, k, v = _qkv(rng, B, H, K, S, T, D, dtype)
+    out = flash_attention(q, k, v, causal=causal, interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), **tol(dtype))
+
+
+def test_flash_attention_valid_len():
+    B, H, K, S, T, D = 1, 4, 2, 128, 256, 64
+    q, k, v = _qkv(jax.random.PRNGKey(0), B, H, K, S, T, D, jnp.float32)
+    vlen = 200
+    out = flash_attention(q, k, v, valid_len=jnp.int32(vlen), causal=True,
+                          interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=True, kv_valid_len=vlen)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_q_offset():
+    """Decode-like chunk: queries at positions [offset, offset+S)."""
+    B, H, K, S, T, D = 1, 2, 2, 128, 256, 64
+    q, k, v = _qkv(jax.random.PRNGKey(1), B, H, K, S, T, D, jnp.float32)
+    out = flash_attention(q, k, v, causal=True, q_offset=100, interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=True, q_offset=100)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+DECODE_CASES = [
+    # (B, K, G, T, D, valid)
+    (1, 4, 1, 512, 64, 512),
+    (2, 2, 4, 1024, 64, 700),     # GQA + partial cache
+    (1, 8, 4, 512, 128, 300),
+    (4, 1, 8, 2048, 64, 2048),    # MQA long cache
+]
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("case", DECODE_CASES)
+def test_decode_attention(case, dtype):
+    B, K, G, T, D, valid = case
+    rng = jax.random.PRNGKey(hash(case) % 2**31)
+    k1, k2, k3 = jax.random.split(rng, 3)
+    q = jax.random.normal(k1, (B, K, G, D), jnp.float32).astype(dtype)
+    k = jax.random.normal(k2, (B, K, T, D), jnp.float32).astype(dtype)
+    v = jax.random.normal(k3, (B, K, T, D), jnp.float32).astype(dtype)
+    out = decode_attention(q, k, v, valid_len=jnp.int32(valid),
+                           interpret=True)
+    want = ref.decode_attention_ref(q, k, v, valid)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), **tol(dtype))
+
+
+MM_CASES = [
+    (128, 256, 128),
+    (256, 512, 384),
+    (128, 1024, 256),
+]
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("case", MM_CASES)
+def test_int8_matmul(case, dtype):
+    M, Kd, N = case
+    rng = jax.random.PRNGKey(hash(case) % 2**31)
+    k1, k2 = jax.random.split(rng)
+    x = jax.random.normal(k1, (M, Kd), jnp.float32).astype(dtype)
+    w = jax.random.normal(k2, (Kd, N), jnp.float32)
+    w_q, scales = ref.quantize_int8(w)
+    out = int8_matmul(x, w_q, scales, interpret=True)
+    want = ref.int8_matmul_ref(x, w_q, scales)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=2e-2 if dtype == jnp.bfloat16 else 1e-4,
+                               atol=2e-2 if dtype == jnp.bfloat16 else 1e-3)
+
+
+def test_grouped_adapter_matches_model_layout():
+    """ops.flash_attention_grouped == layers.attention_core (xla)."""
+    from repro.models.layers import attention_core
+    B, S, K, G, D = 2, 128, 2, 2, 64
+    rng = jax.random.PRNGKey(7)
+    k1, k2, k3 = jax.random.split(rng, 3)
+    q = jax.random.normal(k1, (B, S, K, G, D), jnp.float32)
+    k = jax.random.normal(k2, (B, S, K, D), jnp.float32)
+    v = jax.random.normal(k3, (B, S, K, D), jnp.float32)
+    got = flash_attention_grouped(q, k, v, causal=True, interpret=True)
+    want = attention_core(q, k, v, causal=True, impl="xla")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_decode_adapter_matches_model_layout():
+    from repro.models.layers import attention_core
+    B, K, G, T, D = 2, 2, 4, 256, 64
+    rng = jax.random.PRNGKey(8)
+    k1, k2, k3 = jax.random.split(rng, 3)
+    q = jax.random.normal(k1, (B, 1, K, G, D), jnp.float32)
+    k = jax.random.normal(k2, (B, T, K, D), jnp.float32)
+    v = jax.random.normal(k3, (B, T, K, D), jnp.float32)
+    got = flash_attention_grouped(q, k, v, causal=False, kv_valid_len=200,
+                                  interpret=True)
+    want = attention_core(q, k, v, causal=False, kv_valid_len=200, impl="xla")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)

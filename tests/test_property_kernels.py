@@ -1,0 +1,68 @@
+"""Hypothesis property sweeps for the Pallas kernels (interpret mode):
+random shapes within the kernels' block constraints, allclose vs ref."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.int8_matmul import int8_matmul
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.sampled_from([1, 2]),
+       st.sampled_from([(2, 1), (2, 2), (4, 1)]),
+       st.sampled_from([128, 256]), st.sampled_from([64, 128]),
+       st.booleans())
+def test_flash_attention_property(seed, B, kg, S, D, causal):
+    K, G = kg
+    H = K * G
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(size=(B, H, S, D)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, K, S, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, K, S, D)), jnp.float32)
+    out = flash_attention(q, k, v, causal=causal, interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=3e-5, atol=3e-5)
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.sampled_from([1, 3]),
+       st.sampled_from([(1, 4), (2, 2), (4, 1)]),
+       st.sampled_from([512, 1024]), st.integers(1, 1024))
+def test_decode_attention_property(seed, B, kg, T, valid):
+    K, G = kg
+    valid = min(valid, T)
+    rng = np.random.default_rng(seed)
+    D = 64
+    q = jnp.asarray(rng.normal(size=(B, K, G, D)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, K, T, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, K, T, D)), jnp.float32)
+    out = decode_attention(q, k, v, valid_len=jnp.int32(valid),
+                           interpret=True)
+    want = ref.decode_attention_ref(q, k, v, valid)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=3e-5, atol=3e-5)
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(0, 2**31 - 1),
+       st.sampled_from([(128, 256, 128), (128, 512, 256), (256, 256, 128)]))
+def test_int8_matmul_property(seed, mkn):
+    M, Kd, N = mkn
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(M, Kd)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(Kd, N)), jnp.float32)
+    w_q, scales = ref.quantize_int8(w)
+    out = int8_matmul(x, w_q, scales, interpret=True)
+    want = ref.int8_matmul_ref(x, w_q, scales)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-4, atol=1e-3)
+    # quantization error itself is bounded (property of the int8 scheme)
+    dense = x @ w
+    rel = np.linalg.norm(np.asarray(out) - np.asarray(dense)) / \
+        np.linalg.norm(np.asarray(dense))
+    assert rel < 0.02, rel

@@ -1,0 +1,97 @@
+"""Property-based tests (hypothesis) on control-plane invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.registry import ARCHS
+from repro.core import profiler as prof
+from repro.core.metadata import MetadataStore
+from repro.core.selection import VariantSelector
+from repro.sim.clock import EventLoop
+from repro.sim.cluster import make_cluster
+from repro.sim.workload import popularity_split, poisson_arrivals, zipf_weights
+
+
+@given(st.lists(st.floats(0, 100), min_size=1, max_size=50),
+       st.integers(0, 2**31 - 1))
+def test_eventloop_fires_in_time_order(delays, seed):
+    loop = EventLoop()
+    fired = []
+    for i, d in enumerate(delays):
+        loop.schedule(d, (lambda ii, dd: lambda: fired.append((loop.now())))(
+            i, d))
+    loop.run_until(1e9)
+    assert fired == sorted(fired)
+    assert len(fired) == len(delays)
+
+
+@given(st.floats(1e-6, 10), st.floats(0, 10))
+def test_fit_linear_recovers_exact_line(m, c):
+    batches = [1, 4, 8]
+    lats = [m * b + c for b in batches]
+    m2, c2 = prof.fit_linear(batches, lats)
+    np.testing.assert_allclose([m2, c2], [max(m, 1e-9), max(c, 1e-6)],
+                               rtol=1e-6, atol=1e-6)
+
+
+@given(st.integers(2, 40), st.floats(0.5, 2.0))
+def test_zipf_weights_normalized_and_monotone(n, alpha):
+    w = zipf_weights(n, alpha)
+    assert abs(w.sum() - 1.0) < 1e-9
+    assert all(w[i] >= w[i + 1] for i in range(n - 1))
+
+
+@given(st.integers(2, 10))
+def test_popularity_split_80_20(n):
+    archs = [f"arch{i}" for i in range(n)]
+    split = popularity_split(archs)
+    total = sum(split.weights.values())
+    assert abs(total - 1.0) < 1e-9
+    pop_mass = sum(split.weights[a] for a in split.popular)
+    if split.cold:
+        assert abs(pop_mass - 0.8) < 1e-9
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 64), st.one_of(st.none(), st.floats(1e-3, 10.0)))
+def test_selection_respects_batch_and_slo(batch, slo):
+    store = MetadataStore()
+    prof.register_all(store.registry, [ARCHS["llama3.2-1b"]])
+    store.upsert_worker("w0", ("cpu-host", "tpu-v5e-1"), 0.0)
+    store.heartbeat("w0", {"cpu-host": 0.1, "tpu-v5e-1": 0.1},
+                    {"cpu-host": 0.0, "tpu-v5e-1": 0.0}, 0.0)
+    sel = VariantSelector(store)
+    r = sel.select_arch("llama3.2-1b", batch, slo)
+    if r.variant is not None and r.reason != "slo-relaxed":
+        assert batch <= r.variant.profile.max_batch
+        if slo is not None:
+            assert r.variant.profile.latency(batch) <= slo + 1e-9
+
+
+@settings(max_examples=5, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.floats(20.0, 300.0))
+def test_sim_invariants_under_random_load(seed, rate):
+    """Random Poisson load: memory accounting, replica caps, and query
+    timestamps stay consistent throughout."""
+    from repro.sim import hardware as HW
+    c = make_cluster(n_accel=1, n_cpu=1, archs=[ARCHS["llama3.2-1b"]],
+                     autoscale=False)
+    poisson_arrivals(
+        c.loop, lambda t: rate,
+        lambda t: c.api.online_query(mod_arch="llama3.2-1b",
+                                     latency_ms=5000),
+        t_end=20.0, seed=seed)
+    c.run_until(40.0)
+    for w in c.master.workers.values():
+        for hname, dev in w.devices.items():
+            assert dev.mem_used <= dev.hw.mem_capacity + 1e-6
+            assert dev.active >= 0
+        cpu = w.devices.get("cpu-host")
+        if cpu is not None:
+            used = sum(li.replicas for li in w.instances.values()
+                       if not li.variant.is_accel)
+            assert used <= cpu.slots
+    for q in c.master.metrics:
+        if q.finish >= 0 and not q.failed:
+            assert q.arrival <= q.start <= q.finish
+            v = c.store.registry.variants[q.variant]
+            assert q.n_inputs <= v.profile.max_batch

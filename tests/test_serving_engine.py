@@ -1,0 +1,39 @@
+"""Real-execution serving engine on host with a reduced-config model."""
+import numpy as np
+
+import jax
+
+from repro.configs.registry import ARCHS
+from repro.models import build_model
+from repro.serving.engine import Request, ServingEngine
+
+
+def test_engine_greedy_matches_manual_decode():
+    cfg = ARCHS["llama3.2-1b"].reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = ServingEngine(model, params, max_batch=4)
+    prompt = np.arange(6, dtype=np.int32) % cfg.vocab
+    reqs = [Request(rid=0, prompt=prompt, max_new_tokens=4)]
+    out = eng.serve(reqs)
+    assert out[0].tokens is not None and len(out[0].tokens) == 4
+    # manual greedy rollout with forward() must agree
+    import jax.numpy as jnp
+    toks = list(prompt)
+    for _ in range(4):
+        logits = model.forward(params,
+                               {"tokens": jnp.asarray([toks], jnp.int32)})
+        toks.append(int(jnp.argmax(logits[0, -1])))
+    np.testing.assert_array_equal(out[0].tokens, np.asarray(toks[6:]))
+
+
+def test_engine_adaptive_batching_waves():
+    cfg = ARCHS["llama3.2-1b"].reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = ServingEngine(model, params, max_batch=3)
+    reqs = [Request(rid=i, prompt=np.arange(4 + i % 3, dtype=np.int32))
+            for i in range(7)]
+    out = eng.serve(reqs)
+    assert len(out) == 7
+    assert all(r.tokens is not None for r in out)

@@ -1,0 +1,220 @@
+"""Integration tests: master + workers + two-level autoscaler + offline
+sharing + fault tolerance, on the discrete-event cluster."""
+import numpy as np
+import pytest
+
+from repro.configs.registry import ARCHS
+from repro.core.master import MasterConfig
+from repro.sim.cluster import make_cluster
+from repro.sim.workload import poisson_arrivals
+
+LLAMA = ARCHS["llama3.2-1b"]
+ZAMBA = ARCHS["zamba2-1.2b"]
+
+
+def _done(q):
+    return q.finish >= 0 and not q.failed
+
+
+def test_online_query_lifecycle():
+    c = make_cluster(n_accel=1, archs=[LLAMA], autoscale=False)
+    q = c.api.online_query(mod_arch=LLAMA.name, latency_ms=5000)
+    c.run_until(60.0)
+    assert _done(q), (q.failed, q.finish)
+    v = c.store.registry.variants[q.variant]
+    # cold query: latency ~ load + inference (+ dispatch slack)
+    expected = v.profile.load_latency + v.profile.latency(1)
+    assert q.latency == pytest.approx(expected, rel=0.5)
+    # decision overhead was recorded
+    assert c.master.decision_log and c.master.decision_log[0][0] == "modarch"
+
+
+def test_warm_queries_are_fast_and_cached():
+    c = make_cluster(n_accel=1, archs=[LLAMA], autoscale=False)
+    c.api.online_query(mod_arch=LLAMA.name, latency_ms=5000)
+    # stay inside the T_accel=20s scale-down hysteresis so the loaded
+    # variant is still resident (beyond it, the worker autoscaler correctly
+    # downgrades the idle variant and invalidates the cache)
+    c.run_until(8.0)
+    q2 = c.api.online_query(mod_arch=LLAMA.name, latency_ms=5000)
+    c.run_until(10.0)
+    assert _done(q2)
+    v = c.store.registry.variants[q2.variant]
+    assert q2.latency < 0.1 + v.profile.latency(1) * 3
+    assert c.master.decision_log[-1][0] == "modarch"
+    # second identical query must come from the decision cache
+    sel = c.master.selector.select_arch(LLAMA.name, 1, 5.0)
+    assert sel.outcome == "cache"
+
+
+def test_idle_accel_variant_downgrades_over_time():
+    """Zero load: the worker autoscaler walks the variant down the batch
+    ladder (b16 -> ... -> b1 -> CPU eventually), T_accel ticks per rung."""
+    c = make_cluster(n_accel=1, archs=[LLAMA], autoscale=False)
+    q = c.api.online_query(mod_arch=LLAMA.name, latency_ms=5000)
+    c.run_until(220.0)
+    assert _done(q)
+    w = next(iter(c.master.workers.values()))
+    # after repeated hysteresis windows with zero load, nothing should be
+    # left occupying the accelerator
+    accel_left = [li.variant.name for li in w.instances.values()
+                  if li.variant.is_accel]
+    assert not accel_left, accel_left
+
+
+def test_adaptive_batching_under_burst():
+    c = make_cluster(n_accel=1, archs=[LLAMA], autoscale=False)
+    v = [x for x in c.store.registry.variants.values()
+         if x.hardware == "tpu-v5e-1" and x.batch_opt == 8
+         and "bf16" in x.framework][0]
+    w = next(iter(c.master.workers.values()))
+    w.load_variant(v)
+    c.run_until(10.0)
+    qs = [c.api.online_query(mod_var=v.name, latency_ms=5000)
+          for _ in range(64)]
+    c.run_until(20.0)
+    assert all(_done(q) for q in qs)
+    serial = 64 * v.profile.latency(1)
+    makespan = max(q.finish for q in qs) - min(q.arrival for q in qs)
+    # adaptive batching packs 8 requests/job: ~8 jobs of t(8) << 64 x t(1)
+    assert makespan < serial * 0.6, (makespan, serial)
+
+
+def test_worker_autoscaler_replicates_on_cpu():
+    c = make_cluster(n_accel=0, n_cpu=1, archs=[LLAMA], autoscale=False)
+    cpu_variants = [v for v in c.store.registry.variants.values()
+                    if v.hardware == "cpu-host"]
+    v = max(cpu_variants, key=lambda x: x.profile.peak_qps)
+    w = next(iter(c.master.workers.values()))
+    w.load_variant(v)
+    c.run_until(10.0)
+    rate = v.profile.peak_qps * 1.6   # beyond one replica
+    poisson_arrivals(
+        c.loop, lambda t: rate,
+        lambda t: c.api.online_query(mod_var=v.name, latency_ms=10_000),
+        t_end=40.0, seed=1)
+    c.run_until(30.0)   # mid-load: replicas grew
+    li = w.instances.get(v.name)
+    assert li is not None and li.replicas >= 2, li.replicas
+    c.run_until(120.0)  # load gone: hysteretic scale-down kicks in
+    li = w.instances.get(v.name)
+    assert li is None or li.replicas < 4
+
+
+def test_worker_autoscaler_upgrades_accel_variant():
+    c = make_cluster(n_accel=1, archs=[LLAMA], autoscale=False)
+    accel_b1 = [v for v in c.store.registry.variants.values()
+                if v.hardware == "tpu-v5e-1" and v.batch_opt == 1
+                and "bf16" in v.framework][0]
+    w = next(iter(c.master.workers.values()))
+    w.load_variant(accel_b1)
+    c.run_until(10.0)
+    rate = accel_b1.profile.peak_qps * 2.5
+    poisson_arrivals(
+        c.loop, lambda t: rate,
+        lambda t: c.api.online_query(mod_arch=LLAMA.name, latency_ms=10_000),
+        t_end=60.0, seed=2)
+    c.run_until(90.0)
+    batches = [li.variant.batch_opt for li in w.instances.values()
+               if li.variant.is_accel]
+    assert batches and max(batches) > 1, batches
+
+
+def test_scale_down_is_hysteretic():
+    c = make_cluster(n_accel=0, n_cpu=1, archs=[LLAMA], autoscale=False)
+    v = max((x for x in c.store.registry.variants.values()
+             if x.hardware == "cpu-host"), key=lambda x: x.profile.peak_qps)
+    w = next(iter(c.master.workers.values()))
+    w.load_variant(v, replicas=3)
+    c.run_until(5.0)
+    li = w.instances[v.name]
+    assert li.replicas == 3
+    # zero load: must NOT scale down before T_cpu=10 autoscale ticks
+    c.run_until(5.0 + 5.0)
+    assert w.instances[v.name].replicas == 3
+    c.run_until(5.0 + 30.0)
+    assert w.instances[v.name].replicas < 3
+
+
+def test_offline_best_effort_and_throttling():
+    c = make_cluster(n_accel=1, archs=[LLAMA], autoscale=False)
+    job = c.api.offline_query(mod_arch=LLAMA.name, n_inputs=2000)
+    c.run_until(120.0)
+    assert job.processed > 0, "offline job made no progress in slack"
+    # online queries co-located with offline still meet relaxed SLOs
+    qs = [c.api.online_query(mod_arch=LLAMA.name, latency_ms=5000)
+          for _ in range(16)]
+    c.run_until(240.0)
+    assert all(_done(q) for q in qs)
+    online_viol = sum(q.violated for q in qs)
+    assert online_viol <= 2, online_viol
+
+
+def test_worker_failure_redispatch():
+    cfg = MasterConfig()
+    c = make_cluster(n_accel=2, archs=[LLAMA], autoscale=False, cfg=cfg)
+    c.api.online_query(mod_arch=LLAMA.name, latency_ms=10_000)
+    c.run_until(30.0)
+    # saturate both workers then kill one
+    qs = [c.api.online_query(mod_arch=LLAMA.name, latency_ms=60_000)
+          for _ in range(32)]
+    victims = [n for n, w in c.master.workers.items()
+               if any(li.pending or li.outstanding
+                      for li in w.instances.values())]
+    assert victims
+    c.master.fail_worker(victims[0])
+    c.run_until(240.0)
+    done = [q for q in qs if _done(q)]
+    assert len(done) == len(qs), f"{len(done)}/{len(qs)} after failure"
+    # dead worker is out of the routing tables
+    assert not c.store.workers[victims[0]].alive
+
+
+def test_hedged_requests_cut_straggler_latency():
+    cfg = MasterConfig(hedge_enabled=True, hedge_factor=2.0)
+    c = make_cluster(n_accel=1, archs=[LLAMA], autoscale=False, cfg=cfg)
+    slow = c.master.add_worker("accel", name="straggler", slowdown=25.0)
+    # preload the same variant on both workers
+    v = [x for x in c.store.registry.variants.values()
+         if x.hardware == "tpu-v5e-1" and x.batch_opt == 8
+         and "bf16" in x.framework][0]
+    for w in c.master.workers.values():
+        w.load_variant(v)
+    c.run_until(60.0)
+    # route a query to the straggler explicitly
+    q = c.master.online_query(n_inputs=1, slo=30.0, variant=v.name)
+    from repro.core.selection import Selection
+    c.run_until(300.0)
+    assert _done(q)
+    slow_latency = v.profile.latency(1) * 25.0
+    assert q.latency < slow_latency, (q.latency, slow_latency)
+
+
+def test_master_autoscaler_adds_and_removes_workers():
+    c = make_cluster(n_accel=1, archs=[LLAMA], autoscale=True)
+    v = [x for x in c.store.registry.variants.values()
+         if x.hardware == "tpu-v5e-1" and x.batch_opt == 8
+         and "bf16" in x.framework][0]
+    rate = v.profile.peak_qps * 1.5
+    poisson_arrivals(
+        c.loop, lambda t: rate,
+        lambda t: c.api.online_query(mod_arch=LLAMA.name, latency_ms=2000),
+        t_end=45.0, seed=3)
+    c.run_until(60.0)
+    n_peak = sum(1 for w in c.store.workers.values() if w.alive)
+    assert n_peak > 1, "master autoscaler never scaled out"
+    # cool-down: idle variants unload, then idle workers retire
+    c.run_until(300.0)
+    n_end = sum(1 for w in c.store.workers.values() if w.alive)
+    assert n_end < n_peak
+
+
+def test_metadata_heartbeat_failure_detection():
+    c = make_cluster(n_accel=2, archs=[LLAMA], autoscale=False)
+    c.run_until(10.0)
+    name = next(iter(c.master.workers))
+    # silence heartbeats without the master's fail_worker shortcut
+    c.master.workers[name].alive = False
+    c.run_until(30.0)
+    assert not c.store.workers[name].alive, \
+        "missed heartbeats did not mark the worker dead"

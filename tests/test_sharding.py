@@ -1,0 +1,86 @@
+"""Sharding-rule invariants: for every architecture, the partition-spec
+trees must exactly mirror the parameter/cache pytree structures (this is
+what makes the multi-pod dry-run's in_shardings valid), and every sharded
+dim must divide the production mesh axes."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.registry import ARCHS
+from repro.configs.shapes import SHAPES
+from repro.distributed.sharding import (MeshAxes, batch_specs, cache_specs,
+                                        param_specs)
+from repro.models import build_model
+
+# production meshes, described without touching jax device state
+POD = MeshAxes(data=("data",), model="model", data_size=16, model_size=16)
+MULTIPOD = MeshAxes(data=("pod", "data"), model="model", data_size=32,
+                    model_size=16)
+
+IS_SPEC = lambda x: isinstance(x, P)
+
+
+def _struct(tree):
+    return jax.tree.structure(tree, is_leaf=IS_SPEC)
+
+
+@pytest.mark.parametrize("ax", [POD, MULTIPOD], ids=["pod", "multipod"])
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_param_specs_match_init_structure(arch, ax):
+    cfg = ARCHS[arch]
+    model = build_model(cfg)
+    shapes = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    specs = param_specs(cfg, ax)
+    assert jax.tree.structure(shapes) == _struct(specs), arch
+    # rank match + divisibility of every sharded dim
+    sizes = {**{a: ax.data_size // (ax.data_size // 16) for a in ax.data},
+             ax.model: ax.model_size}
+    axis_size = {"data": 16, "pod": 2, "model": 16}
+    for leaf, spec in zip(jax.tree.leaves(shapes),
+                          jax.tree.leaves(specs, is_leaf=IS_SPEC)):
+        assert len(spec) <= len(leaf.shape), (arch, leaf.shape, spec)
+        for dim, names in enumerate(spec):
+            if names is None:
+                continue
+            names = names if isinstance(names, tuple) else (names,)
+            total = 1
+            for n in names:
+                total *= axis_size[n]
+            assert leaf.shape[dim] % total == 0, (arch, leaf.shape, spec)
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_cache_specs_match_cache_structure(arch):
+    cfg = ARCHS[arch]
+    model = build_model(cfg)
+    shape = SHAPES["decode_32k"]
+    cache = model.cache_shapes(shape.global_batch, shape.seq_len,
+                               enc_len=shape.seq_len)
+    specs = cache_specs(cfg, shape.global_batch, POD)
+    assert jax.tree.structure(cache) == _struct(specs), arch
+    axis_size = {"data": 16, "pod": 2, "model": 16}
+    for leaf, spec in zip(jax.tree.leaves(cache),
+                          jax.tree.leaves(specs, is_leaf=IS_SPEC)):
+        for dim, names in enumerate(spec):
+            if names is None:
+                continue
+            names = names if isinstance(names, tuple) else (names,)
+            total = 1
+            for n in names:
+                total *= axis_size[n]
+            assert leaf.shape[dim] % total == 0, (arch, leaf.shape, spec)
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_batch_specs_structure(arch):
+    cfg = ARCHS[arch]
+    specs = batch_specs(cfg, 256, MULTIPOD)
+    assert "tokens" in specs and "targets" in specs
+    if cfg.family == "audio":
+        assert "frames" in specs
+    if cfg.family == "vlm":
+        assert "image_embeds" in specs
+    # batch 1 (long_500k) must not be sharded over data
+    s1 = batch_specs(cfg, 1, MULTIPOD)
+    assert s1["tokens"][0] is None

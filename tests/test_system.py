@@ -1,0 +1,56 @@
+"""End-to-end behaviour test for the full INFaaS system: register models,
+serve all three query granularities under load, autoscale, survive a worker
+failure, and recover the metadata store from a snapshot."""
+import numpy as np
+
+from repro.configs.registry import ARCHS
+from repro.core.metadata import MetadataStore
+from repro.sim.cluster import make_cluster
+from repro.sim.workload import poisson_arrivals
+
+
+def test_full_system_lifecycle():
+    c = make_cluster(n_accel=2, n_cpu=1,
+                     archs=[ARCHS["llama3.2-1b"], ARCHS["yi-9b"],
+                            ARCHS["whisper-base"]], autoscale=True)
+
+    # all three granularities of the model-less abstraction
+    qs = [
+        c.api.online_query(mod_arch="llama3.2-1b", latency_ms=200),
+        c.api.online_query(task="text-generation", dataset="openwebtext",
+                           accuracy=0.71, latency_ms=500),
+        c.api.online_query(task="asr", dataset="librispeech",
+                           accuracy=0.0, latency_ms=500),
+    ]
+    # background load + an offline job sharing the same workers
+    poisson_arrivals(
+        c.loop, lambda t: 30.0,
+        lambda t: c.api.online_query(mod_arch="llama3.2-1b", latency_ms=200),
+        t_end=40.0, seed=0)
+    job = c.api.offline_query(mod_arch="yi-9b", n_inputs=100)
+
+    c.run_until(20.0)
+    # inject a worker failure mid-run
+    victim = next(iter(c.master.workers))
+    c.master.fail_worker(victim)
+    c.run_until(120.0)
+
+    # the three tagged queries completed on suitable variants
+    assert all(q.finish >= 0 and not q.failed for q in qs)
+    assert qs[1].variant.startswith("yi-9b")          # accuracy bound
+    assert qs[2].variant.startswith("whisper-base")   # task routing
+    # background load survived the failure (re-dispatch)
+    done = [q for q in c.master.metrics if q.kind == "online"]
+    ok = [q for q in done if not q.failed]
+    assert len(ok) / max(len(done), 1) > 0.95, \
+        f"only {len(ok)}/{len(done)} queries survived the failure"
+    # offline made progress in the slack
+    assert job.processed > 0
+    # dead worker is fully evicted from the routing state
+    assert not c.store.workers[victim].alive
+    assert not c.store.worker_instances(victim)
+
+    # metadata snapshot -> restore preserves the registry (master failover)
+    blob = c.store.snapshot()
+    restored = MetadataStore.restore(blob)
+    assert set(restored.registry.variants) == set(c.store.registry.variants)
