@@ -1,6 +1,6 @@
-"""End-to-end driver: REAL JAX serving of a small model with batched
-requests through the INFaaS data plane (prefill + decode waves, adaptive
-batching), with measured-vs-profiled latency comparison.
+"""End-to-end driver: REAL JAX serving of a small model through the
+continuous-batching data plane (bucketed prefill admission + fused decode
+segments + slot refill), with measured-vs-profiled latency comparison.
 
 Run:  PYTHONPATH=src python examples/serve_e2e.py
 """
@@ -20,28 +20,40 @@ def main() -> None:
     print(f"building {cfg.name} ({cfg.n_layers}L d={cfg.d_model}) on host...")
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    engine = ServingEngine(model, params, max_batch=8)
+    engine = ServingEngine(model, params, max_batch=8, max_len=64,
+                           decode_block=16)
 
     rng = np.random.default_rng(0)
     reqs = [Request(rid=i,
                     prompt=rng.integers(0, cfg.vocab, size=rng.integers(4, 12)
                                         ).astype(np.int32),
-                    max_new_tokens=8)
+                    max_new_tokens=int(rng.integers(4, 17)))
             for i in range(20)]
+    engine.warmup(prompt_lens=[len(r.prompt) for r in reqs])
     t0 = time.perf_counter()
     done = engine.serve(reqs)
     wall = time.perf_counter() - t0
-    print(f"served {len(done)} requests in {wall*1e3:.1f} ms "
-          f"({len(done)/wall:.1f} req/s with adaptive batching)")
+    n_toks = sum(len(r.tokens) for r in done)
+    print(f"served {len(done)} requests / {n_toks} tokens in "
+          f"{wall*1e3:.1f} ms ({n_toks/wall:.0f} tok/s, "
+          f"{len(done)/wall:.1f} req/s with continuous batching)")
+    s = engine.stats
+    print(f"  engine: {s['prefill_dispatches']} prefill + "
+          f"{s['decode_dispatches']} decode dispatches for "
+          f"{s['decode_steps']} decode steps; compiles: "
+          f"{s['prefill_traces']} prefill buckets, "
+          f"{s['decode_traces']} decode program")
     for r in done[:5]:
         print(f"  req {r.rid}: prompt_len={len(r.prompt)} -> "
-              f"tokens {list(r.tokens)} (wave latency {r.latency*1e3:.1f} ms)")
+              f"tokens {[int(t) for t in r.tokens]} "
+              f"(latency {r.latency*1e3:.1f} ms)")
 
-    # profile the real step like the INFaaS profiler would
+    # profile the real step like the INFaaS profiler would — warmup means
+    # the measured t(b) is pure execution, no compile time inside
     def step(batch: int) -> None:
         rs = [Request(rid=i, prompt=np.arange(8, dtype=np.int32),
                       max_new_tokens=4) for i in range(batch)]
-        engine.run_wave(rs)
+        engine.serve(rs)
 
     m, c, lats = prof.profile_measured(step, batches=(1, 4, 8))
     print(f"\nmeasured latency fit: t(b) = {m*1e3:.2f}ms * b + {c*1e3:.2f}ms"

@@ -76,6 +76,8 @@ class _Device:
         self.active = 0
         self.mem_used = 0.0
         self.busy_accum = 0.0       # busy seconds since last monitor tick
+        self.window_start = 0.0     # time of the last monitor tick
+        self.running: set = set()   # in-flight _Jobs (for live busy credit)
         self.waiting: Deque = deque()
 
     @property
@@ -84,7 +86,8 @@ class _Device:
 
 
 class _Job:
-    __slots__ = ("instance", "queries", "batch", "offline_job", "duration")
+    __slots__ = ("instance", "queries", "batch", "offline_job", "duration",
+                 "start_time")
 
     def __init__(self, instance, queries, batch, offline_job=None):
         self.instance = instance
@@ -92,6 +95,7 @@ class _Job:
         self.batch = batch
         self.offline_job = offline_job
         self.duration = 0.0
+        self.start_time = 0.0
 
 
 class _LocalInstance:
@@ -266,6 +270,8 @@ class Worker:
     def _start(self, dev: _Device, job: _Job) -> None:
         dev.active += 1
         now = self.loop.now()
+        job.start_time = now
+        dev.running.add(job)
         for q in job.queries:
             if q.start < 0:
                 q.start = now
@@ -280,8 +286,11 @@ class Worker:
                     q.done_cb(q)
             return
         dev.active -= 1
-        dev.busy_accum += job.duration
+        dev.running.discard(job)
         now = self.loop.now()
+        # credit only the part of the job inside the current monitor window;
+        # the earlier part was credited live by monitor_tick
+        dev.busy_accum += now - max(job.start_time, dev.window_start)
         li = job.instance
         if job.offline_job is None:
             li.outstanding -= 1
@@ -354,10 +363,16 @@ class Worker:
         window = self.cfg.monitor_period
         util, mem = {}, {}
         for hname, dev in self.devices.items():
-            busy = dev.busy_accum + dev.active * 0.0
+            # completed-in-window time plus the elapsed share of in-flight
+            # jobs — otherwise long-running jobs report an idle device for
+            # their whole service time and mislead the autoscaler
+            busy = dev.busy_accum + sum(
+                now - max(j.start_time, dev.window_start)
+                for j in dev.running)
             util[hname] = min(1.0, busy / (window * dev.slots))
             mem[hname] = dev.mem_used
             dev.busy_accum = 0.0
+            dev.window_start = now
         self.store.heartbeat(self.name, util, mem, now)
         for vname, li in self.instances.items():
             st = self.store.instance(vname, self.name)

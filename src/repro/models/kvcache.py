@@ -25,9 +25,21 @@ def alloc_attn_cache(n_layers: int, batch: int, max_len: int, n_kv: int,
 def update_layer_cache(k_cache: jax.Array, v_cache: jax.Array,
                        k_new: jax.Array, v_new: jax.Array,
                        pos: Any) -> Tuple[jax.Array, jax.Array]:
-    """Write (B, S_new, K, D) at position ``pos`` of a (B, S_max, K, D) buffer."""
-    k_cache = lax.dynamic_update_slice_in_dim(k_cache, k_new.astype(k_cache.dtype),
-                                              pos, axis=1)
-    v_cache = lax.dynamic_update_slice_in_dim(v_cache, v_new.astype(v_cache.dtype),
-                                              pos, axis=1)
+    """Write (B, S_new, K, D) at position ``pos`` of a (B, S_max, K, D) buffer.
+
+    ``pos`` is either a shared scalar position (run-to-completion waves, all
+    sequences in lockstep) or a (B,) vector of per-sequence positions
+    (continuous batching: every batch slot is at its own decode offset). The
+    vector form lowers to a per-row scatter via vmap.
+    """
+    if jnp.ndim(pos) == 0:
+        k_cache = lax.dynamic_update_slice_in_dim(
+            k_cache, k_new.astype(k_cache.dtype), pos, axis=1)
+        v_cache = lax.dynamic_update_slice_in_dim(
+            v_cache, v_new.astype(v_cache.dtype), pos, axis=1)
+        return k_cache, v_cache
+    write = jax.vmap(
+        lambda c, n, p: lax.dynamic_update_slice_in_dim(c, n, p, axis=0))
+    k_cache = write(k_cache, k_new.astype(k_cache.dtype), pos)
+    v_cache = write(v_cache, v_new.astype(v_cache.dtype), pos)
     return k_cache, v_cache

@@ -290,10 +290,17 @@ def attention_core(
     *,
     causal: bool,
     q_offset: Any = 0,            # query position offset (decode: cache_len)
-    kv_valid_len: Optional[Any] = None,   # mask kv positions >= this
+    kv_valid_len: Optional[Any] = None,   # mask kv positions >= this;
+                                          # scalar, or (B,) per-sequence
     impl: str = "xla",
 ) -> jax.Array:
     """Grouped-query attention. Returns (B, S, K, G, D)."""
+    # Per-sequence valid lengths (continuous batching: each batch slot is at
+    # a different decode position) only lower through the plain XLA path —
+    # the Pallas/split-K kernels take a single scalar length.
+    vec_valid = kv_valid_len is not None and jnp.ndim(kv_valid_len) > 0
+    if vec_valid:
+        impl = "xla"
     if impl == "xla_chunked" and q.shape[1] == 1 and kv_valid_len is not None:
         # decode against a long cache: use the split-K shard_map path when
         # the cache is sequence-sharded over the model axis
@@ -327,8 +334,13 @@ def attention_core(
         if causal:
             s_idx = jnp.arange(S)[:, None] + q_offset
             mask = t_idx[None, :] <= s_idx
-        if kv_valid_len is not None:
+        if kv_valid_len is not None and not vec_valid:
             mask = mask & (t_idx[None, :] < kv_valid_len)
+        if vec_valid:
+            # (B, 1, 1, S, T) mask broadcasting over scores (B, K, G, S, T)
+            per_seq = t_idx[None, :] < jnp.reshape(kv_valid_len, (-1, 1))
+            mask = mask[None] & per_seq[:, None, :]
+            mask = mask[:, None, None]
         scores = jnp.where(mask, scores, -1e30)
     probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
     return jnp.einsum("bkgst,btkd->bskgd", probs, v)
@@ -402,6 +414,20 @@ def swiglu(x: jax.Array, p: Params) -> jax.Array:
 
 def embed_tokens(tokens: jax.Array, table: jax.Array, dtype) -> jax.Array:
     return jnp.take(table, tokens, axis=0).astype(dtype)
+
+
+def select_last(x: jax.Array, length: Optional[jax.Array]) -> jax.Array:
+    """Select the last *valid* position per sequence: x (B, S, d) -> (B, 1, d).
+
+    ``length`` is an optional (B,) int array of valid prefix lengths (prompts
+    right-padded to a shared bucket); None means the full sequence is valid,
+    which reduces to ``x[:, -1:]``. Used by prefill so the engine reads the
+    next-token logits at position length-1 rather than at the padded end.
+    """
+    if length is None:
+        return x[:, -1:]
+    idx = jnp.clip(length.astype(jnp.int32) - 1, 0, x.shape[1] - 1)
+    return jnp.take_along_axis(x, idx[:, None, None], axis=1)
 
 
 def lm_logits(x: jax.Array, head: jax.Array) -> jax.Array:

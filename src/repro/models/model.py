@@ -9,6 +9,15 @@
   * ``cache_shapes(batch, max_len) -> pytree of ShapeDtypeStruct``
 
 All functions are jit/pjit-compatible and usable under ``jax.eval_shape``.
+
+Serving extensions (used by the continuous-batching engine):
+  * ``batch`` may carry ``"length"``, a (B,) int array of valid prefix
+    lengths for prompts right-padded to a shared bucket. Prefill then reads
+    the next-token logits at position length-1 (still returning (B, 1, V))
+    and — for the recurrent families — masks the recurrence so padded
+    positions leave the carried state untouched.
+  * ``decode``'s ``pos`` may be a (B,) vector of per-sequence positions
+    instead of a shared scalar (each batch slot at its own decode offset).
 """
 from __future__ import annotations
 
@@ -58,7 +67,8 @@ def build_model(cfg: ArchConfig, parallel=None) -> Model:
             cfg=cfg,
             init=lambda rng: T.init_dense(cfg, rng),
             forward=lambda p, b: T.forward_dense(cfg, p, b["tokens"]),
-            prefill=lambda p, b: T.prefill_dense(cfg, p, b["tokens"]),
+            prefill=lambda p, b: T.prefill_dense(cfg, p, b["tokens"],
+                                                 length=b.get("length")),
             decode=lambda p, c, t, pos: T.decode_dense(cfg, p, c, t, pos),
             cache_shapes=lambda batch, max_len, **kw: _attn_cache_shapes(
                 cfg, cfg.n_layers, batch, max_len),
@@ -69,7 +79,8 @@ def build_model(cfg: ArchConfig, parallel=None) -> Model:
             cfg=cfg,
             init=lambda rng: M.init_moe(cfg, rng),
             forward=lambda p, b: M.forward_moe(cfg, p, b["tokens"], parallel),
-            prefill=lambda p, b: M.prefill_moe(cfg, p, b["tokens"], parallel),
+            prefill=lambda p, b: M.prefill_moe(cfg, p, b["tokens"], parallel,
+                                               length=b.get("length")),
             decode=lambda p, c, t, pos: M.decode_moe(cfg, p, c, t, pos,
                                                      parallel),
             cache_shapes=lambda batch, max_len, **kw: _attn_cache_shapes(
@@ -81,7 +92,8 @@ def build_model(cfg: ArchConfig, parallel=None) -> Model:
             cfg=cfg,
             init=lambda rng: S.init_zamba(cfg, rng),
             forward=lambda p, b: S.forward_zamba(cfg, p, b["tokens"]),
-            prefill=lambda p, b: S.prefill_zamba(cfg, p, b["tokens"]),
+            prefill=lambda p, b: S.prefill_zamba(cfg, p, b["tokens"],
+                                                 length=b.get("length")),
             decode=lambda p, c, t, pos: S.decode_zamba(cfg, p, c, t, pos),
             cache_shapes=lambda batch, max_len, **kw: S.zamba_cache_shapes(
                 cfg, batch, max_len),
@@ -92,7 +104,8 @@ def build_model(cfg: ArchConfig, parallel=None) -> Model:
             cfg=cfg,
             init=lambda rng: X.init_xlstm(cfg, rng),
             forward=lambda p, b: X.forward_xlstm(cfg, p, b["tokens"]),
-            prefill=lambda p, b: X.prefill_xlstm(cfg, p, b["tokens"]),
+            prefill=lambda p, b: X.prefill_xlstm(cfg, p, b["tokens"],
+                                                 length=b.get("length")),
             decode=lambda p, c, t, pos: X.decode_xlstm(cfg, p, c, t, pos),
             cache_shapes=lambda batch, max_len, **kw: X.xlstm_cache_shapes(
                 cfg, batch, max_len),
@@ -113,7 +126,8 @@ def build_model(cfg: ArchConfig, parallel=None) -> Model:
             forward=lambda p, b: T.forward_audio(cfg, p, b["tokens"],
                                                  b["frames"]),
             prefill=lambda p, b: T.prefill_audio(cfg, p, b["tokens"],
-                                                 b["frames"]),
+                                                 b["frames"],
+                                                 length=b.get("length")),
             decode=lambda p, c, t, pos: T.decode_audio(cfg, p, c, t, pos),
             cache_shapes=cache_shapes,
         )
@@ -138,7 +152,8 @@ def build_model(cfg: ArchConfig, parallel=None) -> Model:
             forward=lambda p, b: T.forward_vlm(cfg, p, b["tokens"],
                                                b["image_embeds"]),
             prefill=lambda p, b: T.prefill_vlm(cfg, p, b["tokens"],
-                                               b["image_embeds"]),
+                                               b["image_embeds"],
+                                               length=b.get("length")),
             decode=lambda p, c, t, pos: T.decode_vlm(cfg, p, c, t, pos),
             cache_shapes=cache_shapes,
         )

@@ -27,7 +27,7 @@ from repro.configs.base import ArchConfig
 from repro.models import layers as L
 from repro.models import kvcache as KV
 from repro.models.transformer import (_maybe_remat, _stacked_attn_init,
-                                      _decode_block)
+                                      _decode_block, decode_positions)
 
 Params = Dict[str, Any]
 
@@ -253,7 +253,11 @@ def forward_moe(cfg: ArchConfig, params: Params, tokens: jax.Array,
 
 
 def prefill_moe(cfg: ArchConfig, params: Params, tokens: jax.Array,
-                parallel=None):
+                parallel=None, length: Optional[jax.Array] = None):
+    """``length``: optional (B,) valid prefix lengths for right-padded
+    prompts (see ``prefill_dense``). NOTE: expert capacity is computed from
+    the padded token count, so capacity-induced token drops can differ from
+    an exact-length run under extreme router imbalance."""
     dtype = jnp.dtype(cfg.dtype)
     B, S = tokens.shape
     positions = jnp.arange(S)[None, :]
@@ -266,7 +270,7 @@ def prefill_moe(cfg: ArchConfig, params: Params, tokens: jax.Array,
 
     x, (ks, vs) = lax.scan(_maybe_remat(body, cfg), x, params["layers"])
     x = L.rmsnorm(x, params["ln_f"])
-    logits = L.lm_logits(x[:, -1:], params["head"])
+    logits = L.lm_logits(L.select_last(x, length), params["head"])
     return logits, {"k": ks, "v": vs}
 
 
@@ -279,7 +283,7 @@ def decode_moe(cfg: ArchConfig, params: Params, cache, token: jax.Array, pos,
         blk, kc, vc = xs
         h = L.rmsnorm(carry, blk["ln1"])
         q, k, v = L.attn_qkv(h, blk["attn"])
-        positions = jnp.full((carry.shape[0], 1), pos)
+        positions = decode_positions(pos, carry.shape[0])
         q = L.apply_rope(q, positions, cfg.rope_theta)
         k = L.apply_rope(k, positions, cfg.rope_theta)
         kc, vc = KV.update_layer_cache(kc, vc, k, v, pos)

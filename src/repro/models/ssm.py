@@ -22,7 +22,8 @@ from jax import lax
 from repro.configs.base import ArchConfig
 from repro.models import layers as L
 from repro.models import kvcache as KV
-from repro.models.transformer import _maybe_remat, _stacked_attn_init
+from repro.models.transformer import (_maybe_remat, _stacked_attn_init,
+                                      decode_positions)
 
 Params = Dict[str, Any]
 
@@ -200,8 +201,15 @@ def _conv_step(x1: jax.Array, conv_state: jax.Array, w: jax.Array,
 
 
 def mamba_block_full(x: jax.Array, p: Params, cfg: ArchConfig,
-                     h0: Optional[jax.Array] = None):
-    """x: (B, L, d). Returns (y (B, L, d), final ssm_state (B, h, n, p))."""
+                     h0: Optional[jax.Array] = None,
+                     mask: Optional[jax.Array] = None):
+    """x: (B, L, d). Returns (y (B, L, d), final ssm_state (B, h, n, p)).
+
+    ``mask``: optional (B, L) bool validity mask for right-padded prompts.
+    Masked positions get dt = 0, i.e. decay exp(dt*A) = 1 and input dt*x = 0,
+    which makes the SSD recurrence an exact identity there — the final state
+    equals the state after the last valid token.
+    """
     B, Lseq, d = x.shape
     di, h, pdim, ci = mamba_dims(cfg)
     n = cfg.ssm_state
@@ -215,11 +223,13 @@ def mamba_block_full(x: jax.Array, p: Params, cfg: ArchConfig,
                      .astype(jnp.float32)).astype(x.dtype)
     Bm, Cm = jnp.split(bc, [n], axis=-1)
     dt = jax.nn.softplus(dt + p["dt_bias"])                        # (B,L,h)
+    if mask is not None:
+        dt = dt * mask[..., None].astype(dt.dtype)
     A = -jnp.exp(p["A_log"])                                       # (h,)
     dA = dt * A                                                    # (B,L,h)
     xh = xs.reshape(B, Lseq, h, pdim)
     xdt = xh * dt[..., None].astype(x.dtype)
-    y, state = ssd_chunked(xdt, dA, Bm, Cm, cfg.ssm_chunk, h0)
+    y, state = ssd_chunked(xdt, dA, Bm, Cm, min(cfg.ssm_chunk, Lseq), h0)
     y = y + xh * p["D"][None, None, :, None].astype(x.dtype)
     y = y.reshape(B, Lseq, di)
     y = _gated_rmsnorm(y, z, p["norm"])
@@ -263,11 +273,26 @@ def mamba_block_step(x1: jax.Array, p: Params, cfg: ArchConfig,
 
 # NOTE: mamba_block_full returns only the ssm state; the conv tail needed to
 # continue decoding after a prefill is recomputed here (last W-1 conv inputs).
-def mamba_conv_tail(x: jax.Array, p: Params, cfg: ArchConfig) -> jax.Array:
-    tail = x[:, -(CONV_WIDTH - 1):, :]
+def mamba_conv_tail(x: jax.Array, p: Params, cfg: ArchConfig,
+                    length: Optional[jax.Array] = None) -> jax.Array:
+    """``length``: optional (B,) valid prefix lengths. The conv window must
+    hold the last W-1 *valid* inputs, which for right-padded prompts sit at
+    positions length-(W-1)..length-1 (zero rows where that underflows, the
+    causal conv's implicit zero padding)."""
+    W1 = CONV_WIDTH - 1
+    if length is None:
+        tail = x[:, -W1:, :]
+        valid = None
+    else:
+        idx = length[:, None].astype(jnp.int32) - W1 + jnp.arange(W1)[None, :]
+        tail = jnp.take_along_axis(x, jnp.clip(idx, 0)[..., None], axis=1)
+        valid = (idx >= 0)[..., None]
     xs = jnp.einsum("bld,dz->blz", tail, p["w_x"])
     bc = jnp.einsum("bld,dz->blz", tail, p["w_bc"])
-    return jnp.concatenate([xs, bc], axis=-1)
+    out = jnp.concatenate([xs, bc], axis=-1)
+    if valid is not None:
+        out = jnp.where(valid, out, 0.0).astype(out.dtype)
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -327,19 +352,26 @@ def forward_zamba(cfg: ArchConfig, params: Params, tokens: jax.Array):
     return L.lm_logits(x, params["head"])
 
 
-def prefill_zamba(cfg: ArchConfig, params: Params, tokens: jax.Array):
+def prefill_zamba(cfg: ArchConfig, params: Params, tokens: jax.Array,
+                  length: Optional[jax.Array] = None):
+    """``length``: optional (B,) valid prefix lengths for right-padded
+    prompts. Mamba layers mask dt at padded positions (identity recurrence)
+    and gather the conv tail at the last valid inputs; the shared attention
+    block is causal, so its valid positions ignore right padding."""
     dtype = jnp.dtype(cfg.dtype)
     B, S = tokens.shape
     positions = jnp.arange(S)[None, :]
+    mask = None if length is None else \
+        jnp.arange(S)[None, :] < length[:, None]
     x = L.embed_tokens(tokens, params["embed"], dtype)
     grouped, tail_p, g, tail = _split_mamba_stack(params, cfg)
     shared = params["shared"]
 
     def group_body(carry, blks):
         def inner(c, blk):
-            out, state = mamba_block_full(c, blk, cfg)
+            out, state = mamba_block_full(c, blk, cfg, mask=mask)
             return L.constrain_residual(c + out), \
-                (state, mamba_conv_tail(c, blk, cfg))
+                (state, mamba_conv_tail(c, blk, cfg, length))
         carry, (states, convs) = lax.scan(_maybe_remat(inner, cfg), carry, blks)
         carry, (k, v) = _shared_block(carry, shared, cfg, positions)
         return carry, (states, convs, k, v)
@@ -348,12 +380,12 @@ def prefill_zamba(cfg: ArchConfig, params: Params, tokens: jax.Array):
                                               x, grouped)
 
     def tail_body(c, blk):
-        out, state = mamba_block_full(c, blk, cfg)
-        return c + out, (state, mamba_conv_tail(c, blk, cfg))
+        out, state = mamba_block_full(c, blk, cfg, mask=mask)
+        return c + out, (state, mamba_conv_tail(c, blk, cfg, length))
     x, (t_states, t_convs) = lax.scan(tail_body, x, tail_p)
 
     x = L.rmsnorm(x, params["ln_f"])
-    logits = L.lm_logits(x[:, -1:], params["head"])
+    logits = L.lm_logits(L.select_last(x, length), params["head"])
     di, h, pdim, ci = mamba_dims(cfg)
     cache = {
         "ssm": jnp.concatenate(
@@ -384,7 +416,7 @@ def decode_zamba(cfg: ArchConfig, params: Params, cache, token: jax.Array,
     def shared_step(c, kc, vc):
         h = L.rmsnorm(c, shared["ln1"])
         q, k, v = L.attn_qkv(h, shared["attn"])
-        positions = jnp.full((B, 1), pos)
+        positions = decode_positions(pos, B)
         q = L.apply_rope(q, positions, cfg.rope_theta)
         k = L.apply_rope(k, positions, cfg.rope_theta)
         kc, vc = KV.update_layer_cache(kc, vc, k, v, pos)

@@ -169,22 +169,36 @@ def _prefill_scan(x, stack, cfg: ArchConfig, positions):
     return x, ks, vs
 
 
-def prefill_dense(cfg: ArchConfig, params: Params, tokens: jax.Array):
+def prefill_dense(cfg: ArchConfig, params: Params, tokens: jax.Array,
+                  length: Optional[jax.Array] = None):
+    """``length``: optional (B,) valid prefix lengths for right-padded
+    prompts; next-token logits are read at position length-1 (causal
+    attention keeps valid positions independent of right padding)."""
     dtype = jnp.dtype(cfg.dtype)
     B, S = tokens.shape
     positions = jnp.arange(S)[None, :]
     x = L.embed_tokens(tokens, params["embed"], dtype)
     x, ks, vs = _prefill_scan(x, params["layers"], cfg, positions)
     x = L.rmsnorm(x, params["ln_f"])
-    logits = L.lm_logits(x[:, -1:], params["head"])
+    logits = L.lm_logits(L.select_last(x, length), params["head"])
     return logits, {"k": ks, "v": vs}
 
 
+def decode_positions(pos, batch: int) -> jax.Array:
+    """(B, 1) RoPE positions from a shared scalar or per-sequence (B,) pos."""
+    if jnp.ndim(pos) == 0:
+        return jnp.full((batch, 1), pos)
+    return jnp.reshape(pos, (batch, 1))
+
+
 def _decode_block(x, blk, kc, vc, pos, cfg: ArchConfig):
-    """One decode step through one block. x: (B,1,d); kc/vc: (B,Smax,K,D)."""
+    """One decode step through one block. x: (B,1,d); kc/vc: (B,Smax,K,D).
+
+    ``pos`` is a shared scalar or a per-sequence (B,) vector of positions.
+    """
     h = L.rmsnorm(x, blk["ln1"])
     q, k, v = L.attn_qkv(h, blk["attn"])
-    positions = jnp.full((x.shape[0], 1), pos)
+    positions = decode_positions(pos, x.shape[0])
     q = L.apply_rope(q, positions, cfg.rope_theta)
     k = L.apply_rope(k, positions, cfg.rope_theta)
     kc, vc = KV.update_layer_cache(kc, vc, k, v, pos)
@@ -259,7 +273,8 @@ def forward_vlm(cfg: ArchConfig, params: Params, tokens: jax.Array,
 
 
 def prefill_vlm(cfg: ArchConfig, params: Params, tokens: jax.Array,
-                image_embeds: jax.Array):
+                image_embeds: jax.Array,
+                length: Optional[jax.Array] = None):
     """Prefill emitting self-attn KV per self layer + cross KV per cross layer."""
     dtype = jnp.dtype(cfg.dtype)
     B, S = tokens.shape
@@ -293,7 +308,7 @@ def prefill_vlm(cfg: ArchConfig, params: Params, tokens: jax.Array,
     x, (ks, vs, xks, xvs) = lax.scan(_maybe_remat(group_body, cfg), x,
                                      (self_grouped, params["cross_layers"]))
     x = L.rmsnorm(x, params["ln_f"])
-    logits = L.lm_logits(x[:, -1:], params["head"])
+    logits = L.lm_logits(L.select_last(x, length), params["head"])
     cache = {"k": ks, "v": vs, "xk": xks, "xv": xvs}
     return logits, cache
 
@@ -363,7 +378,7 @@ def forward_audio(cfg: ArchConfig, params: Params, tokens: jax.Array,
 
 
 def prefill_audio(cfg: ArchConfig, params: Params, tokens: jax.Array,
-                  frames: jax.Array):
+                  frames: jax.Array, length: Optional[jax.Array] = None):
     dtype = jnp.dtype(cfg.dtype)
     enc = _encode(cfg, params, frames)
     B, S = tokens.shape
@@ -389,7 +404,7 @@ def prefill_audio(cfg: ArchConfig, params: Params, tokens: jax.Array,
     x, (ks, vs, xks, xvs) = lax.scan(body, x,
                                      (params["decoder"], params["cross"]))
     x = L.rmsnorm(x, params["ln_f"])
-    logits = L.lm_logits(x[:, -1:], params["head"])
+    logits = L.lm_logits(L.select_last(x, length), params["head"])
     return logits, {"k": ks, "v": vs, "xk": xks, "xv": xvs}
 
 

@@ -223,8 +223,15 @@ def _mlstm_gates(xm, blk):
     return log_i, log_f
 
 
-def mlstm_block(x, blk, cfg: ArchConfig, state=None, mode="chunked"):
-    """x: (B, S, d). Returns (y, new_state)."""
+def mlstm_block(x, blk, cfg: ArchConfig, state=None, mode="chunked",
+                mask=None):
+    """x: (B, S, d). Returns (y, new_state).
+
+    ``mask``: optional (B, S) bool validity mask for right-padded prompts.
+    Masked positions get log_i = -1e30 (no input) and log_f = 0 (keep), an
+    exact identity on the (C, n, m) state once at least one valid token has
+    been seen — guaranteed for right padding.
+    """
     B, S, d = x.shape
     H, hd = cfg.n_heads, cfg.head_dim
     h_in = L.rmsnorm(x, blk["ln"])
@@ -234,6 +241,9 @@ def mlstm_block(x, blk, cfg: ArchConfig, state=None, mode="chunked"):
     k = jnp.einsum("bsd,de->bse", xm, blk["wk"]).reshape(B, S, H, hd)
     v = jnp.einsum("bsd,de->bse", xm, blk["wv"]).reshape(B, S, H, hd)
     log_i, log_f = _mlstm_gates(xm, blk)
+    if mask is not None:
+        log_i = jnp.where(mask[..., None], log_i, -1e30)
+        log_f = jnp.where(mask[..., None], log_f, 0.0)
     if mode == "chunked":
         h, new_state = mlstm_chunked(q, k, v, log_i, log_f,
                                      min(cfg.ssm_chunk, S), state)
@@ -248,10 +258,13 @@ def mlstm_block(x, blk, cfg: ArchConfig, state=None, mode="chunked"):
 # sLSTM
 
 
-def slstm_scan(x_gates, r, bias, H: int, state=None):
+def slstm_scan(x_gates, r, bias, H: int, state=None, mask=None):
     """x_gates: (B, S, 4d) pre-activations (z,i,f,o order, each d wide).
 
     r: (4, H, hd, hd) recurrent block-diag weights. Returns (h (B,S,d), state).
+    ``mask``: optional (B, S) validity mask; the full (h, c, n, m) state is
+    frozen at masked steps (the hidden h feeds the recurrence, so gate
+    masking alone is not enough — the carry itself must be held).
     """
     B, S, G4 = x_gates.shape
     d = G4 // 4
@@ -259,8 +272,11 @@ def slstm_scan(x_gates, r, bias, H: int, state=None):
     if state is None:
         zeros = jnp.zeros((B, d), jnp.float32)
         state = (zeros, zeros, zeros + 1e-6, jnp.full((B, d), -1e30))
+    if mask is None:
+        mask = jnp.ones((B, S), bool)
 
-    def step(carry, xt):
+    def step(carry, inp):
+        xt, keep = inp
         h_prev, c_prev, n_prev, m_prev = carry
         hp = h_prev.reshape(B, H, hd)
         rec = jnp.einsum("bhd,ghde->bghe", hp, r).reshape(B, 4 * d)
@@ -275,18 +291,23 @@ def slstm_scan(x_gates, r, bias, H: int, state=None):
         c = fw * c_prev + iw * z_
         n = fw * n_prev + iw
         h = o_ * c / jnp.maximum(n, 1e-6)
-        return (h, c, n, m_new), h
+        kb = keep[:, None]
+        new = (jnp.where(kb, h, h_prev), jnp.where(kb, c, c_prev),
+               jnp.where(kb, n, n_prev), jnp.where(kb, m_new, m_prev))
+        return new, h
 
-    (hf, cf, nf, mf), hs = lax.scan(step, state, x_gates.transpose(1, 0, 2))
+    (hf, cf, nf, mf), hs = lax.scan(
+        step, state, (x_gates.transpose(1, 0, 2), mask.transpose(1, 0)))
     return hs.transpose(1, 0, 2), (hf, cf, nf, mf)
 
 
-def slstm_block(x, blk, cfg: ArchConfig, state=None):
+def slstm_block(x, blk, cfg: ArchConfig, state=None, mask=None):
     """x: (B, S, d). Returns (y, new_state)."""
     B, S, d = x.shape
     h_in = L.rmsnorm(x, blk["ln"])
     gates = jnp.einsum("bsd,dg->bsg", h_in, blk["w_in"])
-    h, new_state = slstm_scan(gates, blk["r"], blk["bias"], cfg.n_heads, state)
+    h, new_state = slstm_scan(gates, blk["r"], blk["bias"], cfg.n_heads, state,
+                              mask)
     y = x + h.astype(x.dtype)
     y = y + L.swiglu(L.rmsnorm(y, blk["ln2"]), blk["ffn"])
     return y - x, new_state  # residual added by the caller
@@ -325,8 +346,15 @@ def forward_xlstm(cfg: ArchConfig, params: Params, tokens: jax.Array,
     return L.lm_logits(x, params["head"])
 
 
-def prefill_xlstm(cfg: ArchConfig, params: Params, tokens: jax.Array):
+def prefill_xlstm(cfg: ArchConfig, params: Params, tokens: jax.Array,
+                  length: Optional[jax.Array] = None):
+    """``length``: optional (B,) valid prefix lengths for right-padded
+    prompts; mLSTM gates and the sLSTM carry are masked so padded positions
+    leave all recurrent state untouched."""
     dtype = jnp.dtype(cfg.dtype)
+    B, S = tokens.shape
+    mask = None if length is None else \
+        jnp.arange(S)[None, :] < length[:, None]
     x = L.embed_tokens(tokens, params["embed"], dtype)
     m_grouped, s_stack, g, m_per = _group_stacks(params, cfg)
 
@@ -334,16 +362,16 @@ def prefill_xlstm(cfg: ArchConfig, params: Params, tokens: jax.Array):
         m_blks, s_blk = xs
 
         def inner(c, blk):
-            y, st = mlstm_block(c, blk, cfg)
+            y, st = mlstm_block(c, blk, cfg, mask=mask)
             return L.constrain_residual(c + y), st
 
         carry, m_states = lax.scan(_maybe_remat(inner, cfg), carry, m_blks)
-        y, s_state = slstm_block(carry, s_blk, cfg)
+        y, s_state = slstm_block(carry, s_blk, cfg, mask=mask)
         return carry + y, (m_states, s_state)
 
     x, (m_states, s_states) = lax.scan(group_body, x, (m_grouped, s_stack))
     x = L.rmsnorm(x, params["ln_f"])
-    logits = L.lm_logits(x[:, -1:], params["head"])
+    logits = L.lm_logits(L.select_last(x, length), params["head"])
     flat_m = jax.tree.map(
         lambda a: a.reshape((-1,) + a.shape[2:]), m_states)  # (g*m_per, ...)
     cache = {"mC": flat_m[0], "mn": flat_m[1], "mm": flat_m[2],

@@ -1,1 +1,3 @@
-from repro.serving.engine import JaxExecutor, Request, ServingEngine  # noqa: F401
+from repro.serving.engine import (ContinuousEngine, JaxExecutor,  # noqa: F401
+                                  Request, ServingEngine, WaveEngine,
+                                  bucket_len)

@@ -1,20 +1,71 @@
-"""Real-execution serving engine (host JAX): adaptive batching + prefill/
-decode waves against compiled model functions.
+"""Real-execution serving data plane: continuous-batching, device-resident
+decode engine with shape bucketing.
 
 This is the data plane behind a ``JaxExecutor`` worker: the INFaaS control
-plane picks the variant; this engine actually runs it. Requests are packed
-into waves of at most ``max_batch`` (adaptive batching), prompts are padded
-to a shared length, then decoded step-by-step with a shared KV cache.
+plane picks the variant; this engine actually runs it. The design replaces
+the seed's run-to-completion waves (one device dispatch *and one host sync
+per generated token*, one XLA compile per distinct ``(batch, prompt_len)``)
+with three mechanisms:
+
+**Slot scheduler (continuous batching).** The engine owns a preallocated
+max-shape KV cache of ``max_batch`` slots x ``max_len`` positions plus
+per-slot ``tok``/``pos``/``remaining`` arrays, all device-resident. A
+request is admitted by prefilling its prompt (batch 1, right-padded to a
+bucket) and inserting the resulting cache into a free slot via
+``dynamic_update_slice`` along each leaf's batch axis — there is no
+post-prefill ``_pad_cache`` copy of the whole batch. Slots are freed the
+moment their sequence finishes and refilled from the pending queue between
+decode segments, so short requests never wait for the longest request in a
+wave.
+
+**Fused decode segments.** Decoding runs as a ``lax.while_loop`` over
+``model.decode`` inside one jitted function: up to ``decode_block`` tokens
+for all slots are generated in a single device dispatch with a single
+host sync at the end (the seed engine synced every token). Each slot
+carries its own position vector (``decode``'s per-sequence ``pos``) and an
+activity mask; finished slots stop advancing, and the loop exits early
+when every slot is done, so drained batches stop costing FLOPs.
+
+**Shape bucketing + warmup.** Prompt lengths are padded up to power-of-two
+buckets (>= ``min_bucket``, <= ``max_len``) and admit batches are bucketed
+to {1, max_batch} (same-bucket prompts admitted in one dispatch; padding
+rows scatter out of bounds and are dropped), with prefill executables
+keyed on the (bucket_batch, bucket_len) pair — a mixed-length request
+stream compiles at most two prefills per prompt bucket and exactly one
+decode-segment program per engine.
+``warmup(prompt_lens=...)`` triggers those compiles eagerly so calibration
+(``JaxExecutor``) and latency-sensitive serving never pay compile time
+inside a measured service time. ``stats`` counts actual retraces
+(``prefill_traces`` / ``decode_traces``), which tests pin down.
+
+Exactness: for the dense/hybrid/ssm (and, by the same causal-masking
+argument, vlm) families the engine emits token-for-token the same greedy
+outputs as a serial per-request prefill+decode (prompts are right-padded;
+causal attention masks padded KV via per-sequence valid lengths, and
+recurrent families mask their state updates — see ``repro.models.model``).
+MoE matches serial decode except when GShard-style expert capacity —
+a static function of the padded token count — crosses a boundary between
+the prompt's bucket and its exact length and flips a token-drop decision
+(see ``prefill_moe``); MoE prompts are therefore admitted one per
+dispatch, which keeps decode exact and confines the effect to prefill.
+The audio family inherits the seed's unmasked cross-attention over
+zero-padded encoder KV, so its outputs depend on the engine's ``max_len``
+exactly as they depended on the seed's ``pad_to``.
+
+The seed wave engine survives as ``WaveEngine`` — the benchmark baseline
+for ``benchmarks/fig_engine_throughput.py``.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+from collections import deque
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax import lax
 
 from repro.configs.base import ArchConfig
 from repro.models.model import Model, build_model
@@ -30,21 +81,287 @@ class Request:
     latency: float = 0.0
 
 
+def bucket_len(n: int, minimum: int = 8, maximum: Optional[int] = None) -> int:
+    """Round ``n`` up to a power of two >= ``minimum`` (clamped to maximum)."""
+    b = max(minimum, 1 << max(int(n) - 1, 0).bit_length())
+    if maximum is not None:
+        if n > maximum:
+            raise ValueError(f"length {n} exceeds engine max_len {maximum}")
+        b = min(b, maximum)
+    return b
+
+
 class ServingEngine:
+    """Continuous-batching engine over one model + params (greedy decode)."""
+
     def __init__(self, model: Model, params: Any, max_batch: int = 8,
-                 pad_to: int = 32, dtype=jnp.int32):
+                 max_len: int = 128, decode_block: int = 16,
+                 min_bucket: int = 8):
+        self.model = model
+        self.params = params
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self.decode_block = decode_block
+        self.min_bucket = min_bucket
+        # MoE expert capacity is a function of the co-batched token count,
+        # so grouped admission could change token-drop decisions vs a
+        # serial run; admit MoE prompts one per dispatch to stay exact.
+        self._group_admit = model.cfg.family != "moe"
+        self.stats: Dict[str, int] = {
+            "prefill_traces": 0, "decode_traces": 0,
+            "prefill_dispatches": 0, "decode_dispatches": 0,
+            "decode_steps": 0, "tokens_generated": 0, "admitted": 0,
+        }
+        shapes = model.cache_shapes(max_batch, max_len, enc_len=max_len)
+        self._cache = jax.tree.map(
+            lambda s: jnp.zeros(s.shape, s.dtype), shapes)
+        self._tok = jnp.zeros((max_batch, 1), jnp.int32)
+        self._pos = jnp.zeros((max_batch,), jnp.int32)
+        self._rem = jnp.zeros((max_batch,), jnp.int32)
+        # Per-leaf batch axis, found by diffing cache shapes at two batch
+        # sizes (family-agnostic: attention caches, SSM/conv states, and
+        # grouped VLM layouts all place batch differently).
+        s2 = model.cache_shapes(2, max_len, enc_len=max_len)
+        s3 = model.cache_shapes(3, max_len, enc_len=max_len)
+        self._batch_axes = jax.tree.map(
+            lambda a, b: next(i for i, (x, y) in
+                              enumerate(zip(a.shape, b.shape)) if x != y),
+            s2, s3)
+        self._prefill_fns: Dict[int, Any] = {}
+        self._decode_fn = None
+
+    # ------------------------------------------------------------------
+    # compiled programs (keyed on (bucket_batch, bucket_len) shape)
+    def _get_prefill(self, bucket: int, nbatch: int):
+        key = (nbatch, bucket)
+        fn = self._prefill_fns.get(key)
+        if fn is not None:
+            return fn
+        model, cfg = self.model, self.model.cfg
+        baxes = self._batch_axes
+
+        def prefill_admit(params, cache, tok, pos, rem, tokens, lengths,
+                          slots, max_news):
+            # tokens: (nbatch, bucket); lengths/slots/max_news: (nbatch,).
+            # Padding rows carry slot == max_batch: out-of-bounds scatter
+            # indices are dropped, so they touch no live slot.
+            self.stats["prefill_traces"] += 1   # Python side effect: runs
+            batch = {"tokens": tokens,          # once per (re)trace only
+                     "length": lengths}
+            if cfg.family == "audio":
+                batch["frames"] = jnp.zeros((nbatch, bucket, cfg.d_model),
+                                            cfg.dtype)
+            if cfg.family == "vlm":
+                batch["image_embeds"] = jnp.zeros(
+                    (nbatch, cfg.n_image_tokens, cfg.d_model), cfg.dtype)
+            logits, pcache = model.prefill(params, batch)
+            firsts = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+
+            def insert(slot_leaf, new_leaf, bax):
+                pads = [(0, 0) if i == bax else (0, t - s)
+                        for i, (s, t) in enumerate(zip(new_leaf.shape,
+                                                       slot_leaf.shape))]
+                new_leaf = jnp.pad(new_leaf, pads).astype(slot_leaf.dtype)
+                arr = jnp.moveaxis(slot_leaf, bax, 0)
+                rows = jnp.moveaxis(new_leaf, bax, 0)
+                arr = arr.at[slots].set(rows, mode="drop")
+                return jnp.moveaxis(arr, 0, bax)
+
+            cache = jax.tree.map(insert, cache, pcache, baxes)
+            tok = tok.at[slots].set(firsts[:, None], mode="drop")
+            pos = pos.at[slots].set(lengths, mode="drop")
+            rem = rem.at[slots].set(max_news - 1, mode="drop")
+            return cache, tok, pos, rem, firsts
+
+        fn = jax.jit(prefill_admit)
+        self._prefill_fns[key] = fn
+        return fn
+
+    def _get_decode(self):
+        if self._decode_fn is not None:
+            return self._decode_fn
+        model, steps, slots = self.model, self.decode_block, self.max_batch
+
+        def decode_segment(params, cache, tok, pos, rem):
+            self.stats["decode_traces"] += 1
+
+            def cond(st):
+                i = st[0]
+                return (i < steps) & jnp.any(st[4] > 0)
+
+            def body(st):
+                i, cache, tok, pos, rem, out = st
+                active = rem > 0
+                logits, cache = model.decode(params, cache, tok, pos)
+                nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+                emit = jnp.where(active, nxt, -1)
+                out = lax.dynamic_update_slice(out, emit[:, None], (0, i))
+                tok = jnp.where(active[:, None], nxt[:, None], tok)
+                pos = jnp.where(active, pos + 1, pos)
+                rem = jnp.where(active, rem - 1, rem)
+                return i + 1, cache, tok, pos, rem, out
+
+            out0 = jnp.full((slots, steps), -1, jnp.int32)
+            i, cache, tok, pos, rem, out = lax.while_loop(
+                cond, body, (jnp.int32(0), cache, tok, pos, rem, out0))
+            return cache, tok, pos, rem, out, i
+
+        self._decode_fn = jax.jit(decode_segment)
+        return self._decode_fn
+
+    # ------------------------------------------------------------------
+    def warmup(self, prompt_lens: Sequence[int] = (),
+               include_decode: bool = True) -> None:
+        """Compile prefill executables for the (batch, length) buckets
+        covering ``prompt_lens`` (plus the minimum bucket) and the decode
+        segment.
+
+        Warmup calls run against the live state with every scatter index
+        out of bounds (dropped), so engine state is untouched; subsequent
+        serving on these buckets never recompiles.
+        """
+        buckets = {bucket_len(max(n, 1), self.min_bucket, self.max_len)
+                   for n in list(prompt_lens) + [1]}
+        nbatches = {1, self.max_batch} if self._group_admit else {1}
+        for b in sorted(buckets):
+            for nb in sorted(nbatches):
+                if (nb, b) in self._prefill_fns:
+                    continue        # already compiled; skip the dummy run
+                fn = self._get_prefill(b, nb)
+                out = fn(self.params, self._cache, self._tok, self._pos,
+                         self._rem, np.zeros((nb, b), np.int32),
+                         np.ones((nb,), np.int32),
+                         np.full((nb,), self.max_batch, np.int32),
+                         np.ones((nb,), np.int32))
+                jax.block_until_ready(out[-1])
+        if include_decode and self._decode_fn is None:
+            fn = self._get_decode()
+            out = fn(self.params, self._cache, self._tok, self._pos,
+                     jnp.zeros((self.max_batch,), jnp.int32))
+            jax.block_until_ready(out[-1])
+
+    # ------------------------------------------------------------------
+    def _admit_group(self, bucket: int, rs: List[Request],
+                     slots: List[int]) -> np.ndarray:
+        """One prefill dispatch admitting same-bucket requests into slots.
+
+        Admit batches are bucketed to {1, max_batch} so the executable
+        count stays at <= 2 per prompt bucket; padding rows point their
+        scatter index past the last slot and are dropped.
+        """
+        m = len(rs)
+        nb = 1 if m == 1 else self.max_batch
+        tokens = np.zeros((nb, bucket), np.int32)
+        lengths = np.ones((nb,), np.int32)
+        slot_idx = np.full((nb,), self.max_batch, np.int32)
+        max_news = np.ones((nb,), np.int32)
+        for j, (r, s) in enumerate(zip(rs, slots)):
+            tokens[j, : len(r.prompt)] = r.prompt       # right-pad
+            lengths[j] = len(r.prompt)
+            slot_idx[j] = s
+            max_news[j] = max(r.max_new_tokens, 1)
+        fn = self._get_prefill(bucket, nb)
+        self._cache, self._tok, self._pos, self._rem, firsts = fn(
+            self.params, self._cache, self._tok, self._pos, self._rem,
+            tokens, lengths, slot_idx, max_news)
+        self.stats["prefill_dispatches"] += 1
+        self.stats["admitted"] += m
+        return np.asarray(firsts)[:m]
+
+    def serve(self, reqs: Sequence[Request]) -> List[Request]:
+        """Serve requests to completion with continuous batching."""
+        t0 = time.perf_counter()
+        for r in reqs:
+            if len(r.prompt) + r.max_new_tokens > self.max_len:
+                raise ValueError(
+                    f"request {r.rid}: prompt_len {len(r.prompt)} + max_new "
+                    f"{r.max_new_tokens} exceeds engine max_len "
+                    f"{self.max_len}")
+        pending = deque(reqs)
+        slot_req: List[Optional[Request]] = [None] * self.max_batch
+        gen: Dict[int, List[int]] = {}
+        free = list(range(self.max_batch))[::-1]
+        self._rem = jnp.zeros((self.max_batch,), jnp.int32)
+        decode = self._get_decode()
+        while pending or any(r is not None for r in slot_req):
+            if pending and free:
+                take = min(len(free), len(pending))
+                chunk = [pending.popleft() for _ in range(take)]
+                groups: Dict[int, List[Request]] = {}
+                for r in chunk:
+                    b = bucket_len(len(r.prompt), self.min_bucket,
+                                   self.max_len)
+                    groups.setdefault(b, []).append(r)
+                for b, rs in sorted(groups.items()):
+                    units = [rs] if self._group_admit else [[r] for r in rs]
+                    for unit in units:
+                        slots = [free.pop() for _ in unit]
+                        firsts = self._admit_group(b, unit, slots)
+                        for r, s, f in zip(unit, slots, firsts):
+                            gen[s] = [int(f)]
+                            slot_req[s] = r
+            self._cache, self._tok, self._pos, self._rem, out, n_steps = \
+                decode(self.params, self._cache, self._tok, self._pos,
+                       self._rem)
+            self.stats["decode_dispatches"] += 1
+            out_np = np.asarray(out)                     # the one host sync
+            rem_np = np.asarray(self._rem)
+            self.stats["decode_steps"] += int(n_steps)
+            for slot, r in enumerate(slot_req):
+                if r is None:
+                    continue
+                row = out_np[slot]
+                gen[slot].extend(int(t) for t in row[row >= 0])
+                if rem_np[slot] == 0:
+                    r.tokens = np.asarray(gen.pop(slot)[: r.max_new_tokens],
+                                          np.int32)
+                    r.latency = time.perf_counter() - t0
+                    self.stats["tokens_generated"] += len(r.tokens)
+                    slot_req[slot] = None
+                    free.append(slot)
+        return list(reqs)
+
+    # Legacy wave API (the JaxExecutor calibration path and older callers).
+    def run_wave(self, reqs: Sequence[Request]) -> List[Request]:
+        return self.serve(reqs)
+
+
+# Explicit alias: the continuous engine is the default data plane.
+ContinuousEngine = ServingEngine
+
+
+class WaveEngine:
+    """Seed-style run-to-completion wave engine (benchmark baseline).
+
+    One prefill + per-token decode dispatches with a host sync every step;
+    pads every wave to its longest prompt and decodes to the longest
+    max_new; compiles per distinct (batch, prompt_len) shape. Kept verbatim
+    (minus dead knobs) so ``benchmarks/fig_engine_throughput.py`` can
+    measure the continuous engine against it.
+    """
+
+    def __init__(self, model: Model, params: Any, max_batch: int = 8,
+                 pad_to: int = 32):
         self.model = model
         self.params = params
         self.max_batch = max_batch
         self.pad_to = pad_to
-        self._prefill = jax.jit(model.prefill)
-        self._decode = jax.jit(model.decode)
-        self._cache_tpl = None
+        self.stats: Dict[str, int] = {"prefill_traces": 0,
+                                      "decode_traces": 0}
 
-    # ------------------------------------------------------------------
+        def _prefill(p, b):
+            self.stats["prefill_traces"] += 1
+            return model.prefill(p, b)
+
+        def _decode(p, c, t, pos):
+            self.stats["decode_traces"] += 1
+            return model.decode(p, c, t, pos)
+
+        self._prefill = jax.jit(_prefill)
+        self._decode = jax.jit(_decode)
+
     def _pad_cache(self, cache, batch: int, max_len: int):
-        shapes = self.model.cache_shapes(batch, max_len,
-                                         enc_len=self.pad_to)
+        shapes = self.model.cache_shapes(batch, max_len, enc_len=self.pad_to)
 
         def pad(c, tgt):
             if c.shape == tgt.shape:
@@ -101,7 +418,9 @@ class JaxExecutor:
 
     Loads reduced-config models for the variants' architectures (host-sized)
     and measures actual wall-clock service times, which calibrate the
-    simulator's profile-driven executor.
+    simulator's profile-driven executor. ``execute`` warms the engine's
+    compile caches for the request shape first, so measured service times
+    are pure execution (the seed paid XLA compile time inside measurement).
     """
 
     def __init__(self, arch_cfgs: Dict[str, ArchConfig], seed: int = 0):
@@ -116,10 +435,11 @@ class JaxExecutor:
     def execute(self, arch: str, batch: int, prompt_len: int = 8,
                 max_new: int = 4) -> float:
         eng = self.engines[arch]
+        eng.warmup(prompt_lens=[prompt_len])
         reqs = [Request(rid=i, prompt=np.arange(prompt_len) % 7,
                         max_new_tokens=max_new) for i in range(batch)]
         t0 = time.perf_counter()
-        eng.run_wave(reqs)
+        eng.serve(reqs)
         dt = time.perf_counter() - t0
         self.measured[(arch, batch)] = dt
         return dt

@@ -3,6 +3,9 @@ random shapes within the kernels' block constraints, allclose vs ref."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.kernels import ref
