@@ -1,15 +1,12 @@
 """Shared helpers for the paper-figure benchmarks."""
 from __future__ import annotations
 
-import time
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Sequence, Tuple
 
 import numpy as np
 
-from repro.configs.base import ArchConfig
-from repro.core.master import MasterConfig
 from repro.core.worker import Query
-from repro.sim.cluster import Cluster, make_cluster, serving_archs
+from repro.sim.cluster import Cluster
 
 Row = Tuple[str, float, str]   # (name, us_per_call, derived)
 

@@ -9,14 +9,11 @@ from __future__ import annotations
 
 from typing import Dict, List
 
-import numpy as np
-
 from repro.configs.registry import ARCHS
 from repro.core.master import MasterConfig
 from repro.sim.cluster import make_cluster
 from repro.sim.workload import poisson_arrivals
-from benchmarks.common import (Row, UsageCostTracker, cluster_cost,
-                               steady_metrics)
+from benchmarks.common import Row, UsageCostTracker, steady_metrics
 
 ARCH = ARCHS["llama3.2-1b"]
 # relaxed ramp, strict peak, long relaxed tail (the tail is where INFaaS's

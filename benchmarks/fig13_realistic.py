@@ -16,7 +16,7 @@ from repro.sim.cluster import make_cluster, serving_archs
 from repro.sim.workload import (popularity_split, poisson_arrivals,
                                 step_rate)
 from benchmarks.common import (Row, UtilTracker, baseline_variant,
-                               cluster_cost, steady_metrics, util_series)
+                               cluster_cost, steady_metrics)
 
 LEVELS = [(40.0, r) for r in (50.0, 162.0, 275.0, 387.0, 500.0)]
 T_END = sum(d for d, _ in LEVELS)

@@ -9,8 +9,6 @@ from __future__ import annotations
 import time
 from typing import List
 
-import numpy as np
-
 from repro.configs.registry import ARCHS
 from repro.core import profiler as prof
 from repro.core.metadata import InstanceState, MetadataStore

@@ -6,7 +6,7 @@ on CPU, replication doubles throughput while batching helps little.
 """
 from __future__ import annotations
 
-from typing import List, Tuple
+from typing import List
 
 from repro.configs.registry import ARCHS
 from repro.sim.cluster import make_cluster

@@ -8,7 +8,7 @@ same-family config for CPU smoke tests.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Optional
 
 # Families understood by the model builder.
 FAMILIES = ("dense", "moe", "hybrid", "ssm", "audio", "vlm")
@@ -117,7 +117,6 @@ def _param_count(cfg: ArchConfig, active_only: bool) -> int:
     ffn_dense = 3 * d * cfg.d_ff  # SwiGLU: gate, up, down
     if cfg.family in ("dense", "vlm"):
         per_layer = attn + ffn_dense
-        n_layers = cfg.n_layers
         if cfg.family == "vlm" and cfg.cross_attn_every:
             n_cross = cfg.n_layers // cfg.cross_attn_every
             per_layer_total = cfg.n_layers * per_layer + n_cross * attn
@@ -126,13 +125,11 @@ def _param_count(cfg: ArchConfig, active_only: bool) -> int:
         n_e = (cfg.top_k + cfg.n_shared_experts) if active_only else (
             cfg.n_experts + cfg.n_shared_experts)
         per_layer = attn + n_e * 3 * d * cfg.d_ff + d * cfg.n_experts  # + router
-        n_layers = cfg.n_layers
     elif cfg.family == "hybrid":
         # Mamba2 block params: in_proj (x, z, B, C, dt) + out_proj
         d_inner = 2 * d
         mamba = d * (2 * d_inner + 2 * cfg.ssm_state + cfg.n_heads) + d_inner * d
         shared = attn + ffn_dense  # one shared transformer block (counted once)
-        n_layers = cfg.n_layers
         return emb * 2 + cfg.n_layers * mamba + shared
     elif cfg.family == "ssm":
         # xLSTM: mLSTM block (qkv + gates + out) ~ 8 d^2 ; sLSTM ~ 4.3 d^2 + ffn

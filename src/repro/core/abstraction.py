@@ -8,19 +8,29 @@ accuracy, and differ in latency/memory/cost.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Tuple
 
 
-@dataclasses.dataclass(frozen=True)
+@dataclasses.dataclass(eq=False)
 class VariantProfile:
-    """One-time profiling output (paper §4, Fig. 8): linear latency model
-    t(b) = m*b + c, load latency, and peak memory."""
+    """Profiling output (paper §4, Fig. 8): linear latency model
+    t(b) = m*b + c, load latency, and peak memory.
+
+    Mutable on purpose: the initial fit is analytic (roofline), and real
+    execution (``repro.serving.executor.EngineExecutor``) re-fits m and c
+    in place as measured service times accumulate, so every holder of the
+    variant — selector, autoscaler, workers — sees the calibrated model.
+    ``source`` records which fit is current ("analytic" | "measured").
+    ``eq=False`` keeps identity semantics (and hashability, which the
+    frozen ``Variant`` holding it relies on) for this shared mutable
+    object."""
     m: float                  # seconds per additional batch element
     c: float                  # seconds, intercept
     load_latency: float       # seconds to load onto the target hardware
     peak_memory: float        # bytes (weights + max activation buffers)
     max_batch: int
     peak_qps: float           # saturation throughput (queries/s, batch-weighted)
+    source: str = "analytic"  # "analytic" roofline fit | "measured" refit
 
     def latency(self, batch: int) -> float:
         return self.m * batch + self.c

@@ -21,7 +21,7 @@ from typing import Callable, Dict, List, Optional
 
 from repro.core.abstraction import Variant
 from repro.core.metadata import MetadataStore
-from repro.core.worker import Worker, WorkerConfig
+from repro.core.worker import Worker
 from repro.sim import hardware as HW
 
 

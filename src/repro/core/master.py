@@ -44,11 +44,16 @@ class MasterConfig:
 class Master:
     def __init__(self, store: MetadataStore, repo: ModelRepository,
                  loop: EventLoop, cfg: MasterConfig = MasterConfig(),
-                 autoscale: bool = True):
+                 autoscale: bool = True,
+                 executor_factory: Optional[Callable[[], object]] = None):
         self.store = store
         self.repo = repo
         self.loop = loop
         self.cfg = cfg
+        # data-plane seam: None -> profile-driven SimExecutor per worker;
+        # a factory returning worker Executors -> real engines (backend
+        # "real" in sim.cluster.make_cluster)
+        self.executor_factory = executor_factory
         self.selector = VariantSelector(store)
         self.workers: Dict[str, Worker] = {}
         self.metrics: List[Query] = []
@@ -71,8 +76,10 @@ class Master:
         hardware = ("cpu-host", "tpu-v5e-1") if kind == "accel" \
             else ("cpu-host",)
         name = name or f"worker-{kind}-{next(self._worker_seq)}"
+        executor = self.executor_factory() if self.executor_factory else None
         w = Worker(name, hardware, self.store, self.repo, self.loop,
-                   self.cfg.worker, metrics=self.metrics, slowdown=slowdown)
+                   self.cfg.worker, metrics=self.metrics, slowdown=slowdown,
+                   executor=executor)
         if self.cfg.worker_autoscale:
             WorkerAutoscaler(w, self.store, self._request_worker_load,
                              allow_upgrade=self.cfg.allow_upgrade)
@@ -144,6 +151,8 @@ class Master:
                      done_cb: Optional[Callable] = None) -> Query:
         q = Query(qid=next(self._qid), kind="online", n_inputs=n_inputs,
                   slo=slo, arrival=self.loop.now(), arch=arch or "",
+                  variant=variant or "", task=task or "",
+                  dataset=dataset or "", min_accuracy=accuracy, user=user,
                   done_cb=done_cb)
         t0 = time.perf_counter()
         if variant is not None:
@@ -198,10 +207,22 @@ class Master:
             self._arm_hedge(q, sel)
 
     def _redispatch(self, q: Query, retries: int) -> None:
-        sel = (self.selector.select_arch(q.arch, q.n_inputs, q.slo)
-               if q.arch else
-               self.selector.select_variant(q.variant, q.n_inputs)
-               if q.variant else None)
+        # re-select at the query's original granularity: use-case queries
+        # carry neither arch nor user-named variant, so they re-run
+        # select_usecase. q.variant is also overwritten as a side effect
+        # of every dispatch, so it is the lowest-priority key here and
+        # only pins queries that named a variant up front (arch and task
+        # are empty for those).
+        if q.arch:
+            sel = self.selector.select_arch(q.arch, q.n_inputs, q.slo)
+        elif q.task:
+            sel = self.selector.select_usecase(
+                q.task, q.dataset, q.min_accuracy, q.n_inputs, q.slo,
+                q.user)
+        elif q.variant:
+            sel = self.selector.select_variant(q.variant, q.n_inputs)
+        else:
+            sel = None
         if sel is None:
             q.failed = True
             if q.done_cb:

@@ -9,11 +9,9 @@ after a restore (paper §7 failure handling).
 """
 from __future__ import annotations
 
-import copy
 import dataclasses
 import json
-import time
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 from repro.core.abstraction import Registry, Variant
 

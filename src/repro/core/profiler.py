@@ -20,7 +20,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Sequence, Tuple
 
 import numpy as np
 
@@ -173,6 +173,32 @@ def register_all(registry: Registry, cfgs: Sequence[ArchConfig]) -> int:
 
 # ---------------------------------------------------------------------------
 # measured profiling (host execution)
+
+
+def refit_profile(profile: VariantProfile,
+                  observations: Dict[int, Sequence[float]],
+                  min_points: int = 2) -> bool:
+    """Re-fit a variant's latency model from measured service times.
+
+    ``observations`` maps batch size -> measured wall-clock service times
+    (seconds). Once at least ``min_points`` distinct batch sizes have been
+    observed, t(b) = m*b + c is re-fit over the per-batch means and the
+    profile is updated **in place** (m, c, peak_qps, source="measured"), so
+    the selector and both autoscalers immediately plan with calibrated
+    numbers. Returns True when a refit happened.
+
+    This closes the loop the ROADMAP flagged: real execution feeding the
+    control plane's latency model instead of one-off manual calibration.
+    """
+    pts = {b: float(np.mean(ts)) for b, ts in observations.items() if ts}
+    if len(pts) < min_points:
+        return False
+    batches = sorted(pts)
+    m, c = fit_linear(batches, [pts[b] for b in batches])
+    profile.m, profile.c = m, c
+    profile.peak_qps = profile.max_batch / profile.latency(profile.max_batch)
+    profile.source = "measured"
+    return True
 
 
 def profile_measured(step_fn: Callable[[int], None],

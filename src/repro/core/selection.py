@@ -60,7 +60,6 @@ class VariantSelector:
                    slo: Optional[float]) -> Selection:
         """Outcome 3: lowest combined loading+inference latency."""
         best: Optional[Tuple[float, Variant, str]] = None
-        now = 0.0
         for v in cands:
             if batch > v.profile.max_batch:
                 continue

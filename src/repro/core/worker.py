@@ -5,14 +5,25 @@ Execution model (DESIGN.md §2): an accelerator device is a single temporal-
 sharing resource (one job in service, FIFO across co-resident variants; no
 replication on-accelerator, per paper §6.2); the host CPU offers
 ``cores // cores_per_replica`` concurrent slots and variants scale on it by
-replication. Service time of a batch of size b is the variant's profiled
-t(b) = m*b + c (sim executor) or a real jitted step (Jax executor).
+replication.
+
+The data plane behind a device is pluggable through the ``Executor``
+protocol: ``run(variant, batch)`` returns the service time of one batch.
+``SimExecutor`` (default) answers from the variant's profiled
+t(b) = m*b + c; ``repro.serving.executor.EngineExecutor`` actually runs the
+batch through a real continuous-batching ``ServingEngine`` and returns the
+measured wall time. Everything downstream — ``_submit``/``_complete``, the
+monitoring daemon, and model-level autoscaling — operates identically over
+both, so the INFaaS control plane drives simulated and real execution
+through the same seam. (``EngineExecutor`` lives in ``repro.serving`` so
+the control plane stays importable without JAX.)
 """
 from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import Any, Callable, Deque, Dict, List, Optional
+from typing import (Callable, Deque, Dict, List, Optional, Protocol,
+                    runtime_checkable)
 
 from repro.core.metadata import InstanceState, MetadataStore
 from repro.core.repository import ModelRepository
@@ -29,6 +40,13 @@ class Query:
     arrival: float
     arch: str = ""
     variant: str = ""
+    # use-case granularity (paper §3.2): persisted so a redispatch can
+    # re-run select_usecase instead of failing a query that named neither
+    # an arch nor a variant
+    task: str = ""
+    dataset: str = ""
+    min_accuracy: float = 0.0
+    user: str = "public"
     worker: str = ""
     start: float = -1.0
     finish: float = -1.0
@@ -54,6 +72,34 @@ class OfflineJob:
     @property
     def done(self) -> bool:
         return self.processed >= self.total_inputs
+
+
+@runtime_checkable
+class Executor(Protocol):
+    """Data plane behind a worker device.
+
+    ``run(variant, batch)`` performs (or models) the service of one batch
+    on the variant and returns its service time in seconds. Called when a
+    job actually starts on a device slot; the worker schedules the job's
+    completion that far into the future, so simulated and real execution
+    share the whole dispatch/monitor/autoscale machinery.
+    """
+
+    def run(self, variant, batch: int) -> float:
+        ...
+
+
+class SimExecutor:
+    """Profile-driven executor: service time from the variant's t(b) fit
+    (optionally overridden by a ``service_time_fn(variant, batch)``)."""
+
+    def __init__(self, service_time_fn: Optional[Callable] = None):
+        self.service_time_fn = service_time_fn
+
+    def run(self, variant, batch: int) -> float:
+        if self.service_time_fn is not None:
+            return self.service_time_fn(variant, batch)
+        return variant.profile.latency(batch)
 
 
 @dataclasses.dataclass
@@ -119,7 +165,8 @@ class Worker:
                  cfg: WorkerConfig = WorkerConfig(),
                  metrics: Optional[List[Query]] = None,
                  service_time_fn: Optional[Callable] = None,
-                 slowdown: float = 1.0):
+                 slowdown: float = 1.0,
+                 executor: Optional[Executor] = None):
         self.name = name
         self.hardware = tuple(hardware)
         self.store = store
@@ -132,7 +179,8 @@ class Worker:
         self.instances: Dict[str, _LocalInstance] = {}
         self.offline_jobs: List[OfflineJob] = []
         self.recent_violations = 0
-        self._service_time_fn = service_time_fn
+        self.executor: Executor = executor if executor is not None \
+            else SimExecutor(service_time_fn)
         self.devices: Dict[str, _Device] = {}
         for hname in self.hardware:
             hw = HW.HARDWARE[hname]
@@ -228,11 +276,7 @@ class Worker:
         return 1 if hw.kind == "accel" else li.replicas
 
     def _service_time(self, li: _LocalInstance, batch: int) -> float:
-        if self._service_time_fn is not None:
-            t = self._service_time_fn(li.variant, batch)
-        else:
-            t = li.variant.profile.latency(batch)
-        return t * self.slowdown
+        return self.executor.run(li.variant, batch) * self.slowdown
 
     def _try_dispatch(self, vname: str) -> None:
         li = self.instances.get(vname)
@@ -261,13 +305,17 @@ class Worker:
             self._submit(dev, job)
 
     def _submit(self, dev: _Device, job: _Job) -> None:
-        job.duration = self._service_time(job.instance, job.batch)
         if dev.active < dev.slots:
             self._start(dev, job)
         else:
             dev.waiting.append(job)
 
     def _start(self, dev: _Device, job: _Job) -> None:
+        # service time is resolved when the job actually starts on a slot:
+        # a real executor runs the batch here (and measures it), a sim
+        # executor just evaluates the profile — either way the completion
+        # is scheduled that far into the future
+        job.duration = self._service_time(job.instance, job.batch)
         dev.active += 1
         now = self.loop.now()
         job.start_time = now

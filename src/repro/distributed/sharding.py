@@ -26,9 +26,7 @@ from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ArchConfig
-from repro.configs.shapes import ShapeConfig
 from repro.models import ssm as ssm_lib
-from repro.models import xlstm as xlstm_lib
 
 
 @dataclasses.dataclass(frozen=True)

@@ -58,8 +58,8 @@ def _decode_kernel(vlen_ref, q_ref, k_ref, v_ref, o_ref,
 
     @pl.when(tj == n_t_blocks - 1)
     def _finish():
-        l = jnp.maximum(l_scr[...], 1e-30)
-        o_ref[0, 0] = (acc_scr[...] / l).astype(o_ref.dtype)
+        lsum = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / lsum).astype(o_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("block_t", "interpret"))

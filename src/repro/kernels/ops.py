@@ -7,10 +7,7 @@ selects among "xla" | "pallas" | "pallas_interpret".
 """
 from __future__ import annotations
 
-from typing import Optional
-
 import jax
-import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention

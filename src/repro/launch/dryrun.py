@@ -21,13 +21,13 @@ import dataclasses
 import json
 import time
 import traceback
-from typing import Any, Dict, Optional
+from typing import Any, Dict
 
 import jax
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.registry import ARCHS
-from repro.configs.shapes import ALL_SHAPES, SHAPES, shape_applicable
+from repro.configs.shapes import SHAPES, shape_applicable
 from repro.distributed.parallel import (ParallelConfig,
                                         activation_sharding_from,
                                         set_activation_sharding)
@@ -58,7 +58,8 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
     set_activation_sharding(activation_sharding_from(parallel))
     model = build_model(cfg, parallel)
     ins = specs_lib.input_specs(model, shape)
-    named = lambda specs: shd.to_named(mesh, specs)
+    def named(specs):
+        return shd.to_named(mesh, specs)
 
     if shape.kind == "train":
         step = make_train_step(model)

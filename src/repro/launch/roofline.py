@@ -14,7 +14,7 @@ from __future__ import annotations
 
 import dataclasses
 import re
-from typing import Dict, Optional
+from typing import Dict
 
 from repro.sim.hardware import V5E_HBM_BW, V5E_ICI_BW, V5E_PEAK_FLOPS_BF16
 

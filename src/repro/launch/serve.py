@@ -1,21 +1,28 @@
 """Cluster serving launcher.
 
-Brings up the INFaaS control plane (master + workers + autoscalers) against
-either the simulated executors (default; any scale) or the real host
-executor (reduced configs), registers the selected architectures, and
-drives a workload.
+Brings up the INFaaS control plane (master + workers + autoscalers),
+registers the selected architectures, and drives a Poisson workload.
 
     PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b \
         --workers 2 --rate 50 --duration 60 --slo-ms 100
 
-``--real-engine`` instead drives the real JAX continuous-batching data
-plane (reduced config, host CPU) with a mixed-length stream and reports
-measured tokens/sec and compile counts — the standalone data-plane check
-behind the simulated control plane.
+``--backend`` picks the data plane behind the workers:
+
+* ``sim`` (default) — profile-driven executors; any scale, no JAX
+  execution.
+* ``real`` — every worker runs an ``EngineExecutor``: jobs execute for
+  real on reduced-config continuous-batching engines (host CPU), measured
+  service times drive the clock, and variant profiles are re-fit from the
+  measurements (reported at the end).
+
+``--real-engine`` instead drives one real continuous-batching engine
+directly (no control plane) with a mixed-length stream and reports
+measured tokens/sec and compile counts — the standalone data-plane check.
 """
 from __future__ import annotations
 
 import argparse
+from typing import Optional, Sequence
 
 from repro.configs.registry import ARCHS
 from repro.sim.cluster import make_cluster
@@ -56,10 +63,13 @@ def _real_engine_demo(arch: str, n_reqs: int, slots: int) -> None:
           f"{s['prefill_traces']}+{s['decode_traces']} compiles)")
 
 
-def main() -> None:
+def main(argv: Optional[Sequence[str]] = None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama3.2-1b",
                     help="architecture id, or 'all'")
+    ap.add_argument("--backend", choices=["sim", "real"], default="sim",
+                    help="worker data plane: profiled t(b) models (sim) or "
+                         "real reduced-config engines (real)")
     ap.add_argument("--workers", type=int, default=2)
     ap.add_argument("--cpu-workers", type=int, default=1)
     ap.add_argument("--rate", type=float, default=50.0, help="queries/s")
@@ -69,21 +79,25 @@ def main() -> None:
     ap.add_argument("--hedge", action="store_true",
                     help="enable hedged-request straggler mitigation")
     ap.add_argument("--real-engine", action="store_true",
-                    help="drive the real continuous-batching data plane "
-                         "instead of the simulated cluster")
+                    help="drive one real continuous-batching engine "
+                         "directly, without the control plane")
     ap.add_argument("--real-reqs", type=int, default=32)
     ap.add_argument("--real-slots", type=int, default=8)
-    args = ap.parse_args()
+    args = ap.parse_args(argv)
 
     if args.real_engine:
         _real_engine_demo(args.arch, args.real_reqs, args.real_slots)
         return
 
+    if args.backend == "real" and args.arch == "all":
+        raise SystemExit("--backend real needs a single --arch "
+                         "(each arch builds real model params)")
     archs = None if args.arch == "all" else [ARCHS[args.arch]]
     from repro.core.master import MasterConfig
     cfg = MasterConfig(hedge_enabled=args.hedge)
     c = make_cluster(n_accel=args.workers, n_cpu=args.cpu_workers,
-                     archs=archs, autoscale=not args.no_autoscale, cfg=cfg)
+                     archs=archs, autoscale=not args.no_autoscale, cfg=cfg,
+                     backend=args.backend)
     arch_names = [a for a in (
         [args.arch] if args.arch != "all" else list(ARCHS))]
 
@@ -97,12 +111,21 @@ def main() -> None:
     poisson_arrivals(c.loop, lambda t: args.rate, fire,
                      t_end=args.duration, seed=0)
     c.run_until(args.duration + 30.0)
-    m = steady_metrics(c.master.metrics, 0.0, args.duration)
+    m = steady_metrics(c.master.metrics, 0.0, args.duration + 30.0,
+                       warmup=min(20.0, args.duration / 3.0))
     print(f"served={m['completed']} thr={m['throughput_qps']:.1f} q/s "
           f"viol={m['violation_rate']:.3f} p50={m['p50_ms']:.1f}ms "
           f"p99={m['p99_ms']:.1f}ms")
     alive = sum(1 for w in c.store.workers.values() if w.alive)
     print(f"workers alive at end: {alive}")
+    if args.backend == "real":
+        measured = [v for v in c.store.registry.variants.values()
+                    if v.profile.source == "measured"]
+        for v in measured:
+            print(f"measured profile {v.name}: "
+                  f"t(b) = {v.profile.m*1e3:.2f}ms*b + "
+                  f"{v.profile.c*1e3:.2f}ms")
+        print(f"variants re-fit from real measurements: {len(measured)}")
 
 
 if __name__ == "__main__":

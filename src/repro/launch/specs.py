@@ -42,7 +42,6 @@ def train_state_structs(model: Model) -> Any:
 def decode_structs(model: Model, shape: ShapeConfig) -> Tuple[Any, Any, Any]:
     """(cache, token, pos) structs for serve_step: one new token against a
     cache of shape.seq_len (the last slot receives the new token)."""
-    cfg = model.cfg
     cache = model.cache_shapes(shape.global_batch, shape.seq_len,
                                enc_len=shape.seq_len)
     token = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)

@@ -11,16 +11,13 @@ memory term by G).
 """
 from __future__ import annotations
 
-import dataclasses
 import functools
-from functools import partial
 from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.configs.base import ArchConfig
 
 Params = Dict[str, Any]
 
@@ -136,11 +133,11 @@ def _chunked_fwd(q, k, v, causal, q_offset, qb, kb):
         m0 = jnp.full((B, K, G, qb), -1e30, jnp.float32)
         l0 = jnp.zeros((B, K, G, qb), jnp.float32)
         a0 = jnp.zeros((B, K, G, qb, D), jnp.float32)
-        (m, l, acc), _ = lax.scan(kv_step, (m0, l0, a0),
+        (m, lsum, acc), _ = lax.scan(kv_step, (m0, l0, a0),
                                   (jnp.arange(nk), kr, vr))
-        l = jnp.maximum(l, 1e-30)
-        out = acc / l[..., None]
-        lse = m + jnp.log(l)                   # (B, K, G, qb)
+        lsum = jnp.maximum(lsum, 1e-30)
+        out = acc / lsum[..., None]
+        lse = m + jnp.log(lsum)                # (B, K, G, qb)
         return None, (out.astype(q.dtype), lse)
 
     _, (outs, lses) = lax.scan(q_step, None, (jnp.arange(nq), qr))

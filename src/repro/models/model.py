@@ -22,7 +22,7 @@ Serving extensions (used by the continuous-batching engine):
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, Optional
+from typing import Any, Callable, Dict
 
 import jax
 import jax.numpy as jnp

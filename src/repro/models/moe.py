@@ -15,8 +15,7 @@ Attention/embedding reuse the dense transformer blocks.
 from __future__ import annotations
 
 import math
-from functools import partial
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -27,7 +26,7 @@ from repro.configs.base import ArchConfig
 from repro.models import layers as L
 from repro.models import kvcache as KV
 from repro.models.transformer import (_maybe_remat, _stacked_attn_init,
-                                      _decode_block, decode_positions)
+                                      decode_positions)
 
 Params = Dict[str, Any]
 

@@ -12,7 +12,6 @@ transformer block (attention + SwiGLU, identical parameters) invoked every
 """
 from __future__ import annotations
 
-import math
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -120,10 +119,10 @@ def ssd_chunked(xdt: jax.Array, dA: jax.Array, B_: jax.Array, C_: jax.Array,
     h0: optional initial state (b, h, n, p).
     Returns (y (b, l, h, p), final_state (b, h, n, p)).
     """
-    b, l, h, p = xdt.shape
+    b, slen, h, p = xdt.shape
     n = B_.shape[-1]
-    assert l % chunk == 0, (l, chunk)
-    nc = l // chunk
+    assert slen % chunk == 0, (slen, chunk)
+    nc = slen // chunk
     x_ = xdt.reshape(b, nc, chunk, h, p)
     dA_ = dA.reshape(b, nc, chunk, h).astype(jnp.float32)
     B2 = B_.reshape(b, nc, chunk, n)
@@ -160,7 +159,7 @@ def ssd_chunked(xdt: jax.Array, dA: jax.Array, B_: jax.Array, C_: jax.Array,
     y_inter = jnp.einsum("bcin,bcih,bchnp->bcihp", C2,
                          jnp.exp(cs).astype(xdt.dtype),       # (b,nc,Q,h)
                          S_prevs)
-    y = (y_intra + y_inter).reshape(b, l, h, p)
+    y = (y_intra + y_inter).reshape(b, slen, h, p)
     return y, S_final
 
 

@@ -7,7 +7,6 @@ HLO stays compact for 100-layer configs; ``cfg.remat`` wraps the scan body in
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Any, Dict, Optional, Tuple
 
 import jax

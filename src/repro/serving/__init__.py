@@ -1,3 +1,5 @@
 from repro.serving.engine import (ContinuousEngine, JaxExecutor,  # noqa: F401
                                   Request, ServingEngine, WaveEngine,
                                   bucket_len)
+from repro.serving.executor import (EngineExecutor,  # noqa: F401
+                                    EngineExecutorConfig)

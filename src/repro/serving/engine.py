@@ -38,6 +38,24 @@ decode-segment program per engine.
 inside a measured service time. ``stats`` counts actual retraces
 (``prefill_traces`` / ``decode_traces``), which tests pin down.
 
+**Open-loop core.** The engine is step-driven: state (slot occupancy,
+pending queue, per-slot generations) persists on the engine, and the three
+phases of the serving loop are separately callable —
+
+* ``submit(req)``     enqueue a request (at any time, including while other
+  requests are mid-decode); its latency clock starts at ``Request.arrival``
+  (stamped at submit if unset),
+* ``step()``          admit pending requests into free slots, run ONE fused
+  decode segment, harvest finished slots,
+* ``drain_completions()``  collect requests finished since the last drain.
+
+Mid-stream admission falls out: a request submitted between segments joins
+the next ``step()`` without restarting in-flight slots. ``serve()`` is a
+thin closed loop over the core (submit all, step until idle) and produces
+bit-identical outputs and identical trace/dispatch counts to the closed
+PR-1 loop. The open seam is what lets the INFaaS control plane
+(``EngineExecutor`` in ``repro.serving.executor``) drive real engines.
+
 Exactness: for the dense/hybrid/ssm (and, by the same causal-masking
 argument, vlm) families the engine emits token-for-token the same greedy
 outputs as a serial per-request prefill+decode (prompts are right-padded;
@@ -129,6 +147,13 @@ class ServingEngine:
             s2, s3)
         self._prefill_fns: Dict[int, Any] = {}
         self._decode_fn = None
+        # open-loop state: persists across submit()/step() calls so
+        # requests can arrive while earlier ones are mid-decode
+        self._pending: deque = deque()
+        self._slot_req: List[Optional[Request]] = [None] * max_batch
+        self._gen: Dict[int, List[int]] = {}
+        self._free: List[int] = list(range(max_batch))[::-1]
+        self._completed: List[Request] = []
 
     # ------------------------------------------------------------------
     # compiled programs (keyed on (bucket_batch, bucket_len) shape)
@@ -268,57 +293,102 @@ class ServingEngine:
         self.stats["admitted"] += m
         return np.asarray(firsts)[:m]
 
-    def serve(self, reqs: Sequence[Request]) -> List[Request]:
-        """Serve requests to completion with continuous batching."""
-        t0 = time.perf_counter()
-        for r in reqs:
-            if len(r.prompt) + r.max_new_tokens > self.max_len:
-                raise ValueError(
-                    f"request {r.rid}: prompt_len {len(r.prompt)} + max_new "
-                    f"{r.max_new_tokens} exceeds engine max_len "
-                    f"{self.max_len}")
-        pending = deque(reqs)
-        slot_req: List[Optional[Request]] = [None] * self.max_batch
-        gen: Dict[int, List[int]] = {}
-        free = list(range(self.max_batch))[::-1]
-        self._rem = jnp.zeros((self.max_batch,), jnp.int32)
+    # ------------------------------------------------------------------
+    # open-loop core: submit / step / drain_completions
+    @property
+    def busy(self) -> bool:
+        """True while any request is pending admission or mid-decode."""
+        return bool(self._pending) or \
+            any(r is not None for r in self._slot_req)
+
+    def _validate(self, r: Request) -> None:
+        if len(r.prompt) + r.max_new_tokens > self.max_len:
+            raise ValueError(
+                f"request {r.rid}: prompt_len {len(r.prompt)} + max_new "
+                f"{r.max_new_tokens} exceeds engine max_len "
+                f"{self.max_len}")
+
+    def submit(self, r: Request) -> None:
+        """Enqueue a request; may be called at any time, including while
+        other requests are mid-decode (it joins at the next ``step()``).
+        The latency clock starts at ``r.arrival`` (stamped now if unset)."""
+        self._validate(r)
+        if r.arrival == 0.0:
+            r.arrival = time.perf_counter()
+        self._pending.append(r)
+
+    def _admit_pending(self) -> None:
+        """Fill free slots from the pending queue (grouped by bucket)."""
+        if not (self._pending and self._free):
+            return
+        take = min(len(self._free), len(self._pending))
+        chunk = [self._pending.popleft() for _ in range(take)]
+        groups: Dict[int, List[Request]] = {}
+        for r in chunk:
+            b = bucket_len(len(r.prompt), self.min_bucket, self.max_len)
+            groups.setdefault(b, []).append(r)
+        for b, rs in sorted(groups.items()):
+            units = [rs] if self._group_admit else [[r] for r in rs]
+            for unit in units:
+                slots = [self._free.pop() for _ in unit]
+                firsts = self._admit_group(b, unit, slots)
+                for r, s, f in zip(unit, slots, firsts):
+                    self._gen[s] = [int(f)]
+                    self._slot_req[s] = r
+
+    def step(self) -> int:
+        """One engine step: admit pending requests into free slots, run one
+        fused decode segment, harvest finished slots. Returns the number of
+        decode steps executed (0 when the engine is idle)."""
+        self._admit_pending()
+        if all(r is None for r in self._slot_req):
+            return 0
         decode = self._get_decode()
-        while pending or any(r is not None for r in slot_req):
-            if pending and free:
-                take = min(len(free), len(pending))
-                chunk = [pending.popleft() for _ in range(take)]
-                groups: Dict[int, List[Request]] = {}
-                for r in chunk:
-                    b = bucket_len(len(r.prompt), self.min_bucket,
-                                   self.max_len)
-                    groups.setdefault(b, []).append(r)
-                for b, rs in sorted(groups.items()):
-                    units = [rs] if self._group_admit else [[r] for r in rs]
-                    for unit in units:
-                        slots = [free.pop() for _ in unit]
-                        firsts = self._admit_group(b, unit, slots)
-                        for r, s, f in zip(unit, slots, firsts):
-                            gen[s] = [int(f)]
-                            slot_req[s] = r
-            self._cache, self._tok, self._pos, self._rem, out, n_steps = \
-                decode(self.params, self._cache, self._tok, self._pos,
-                       self._rem)
-            self.stats["decode_dispatches"] += 1
-            out_np = np.asarray(out)                     # the one host sync
-            rem_np = np.asarray(self._rem)
-            self.stats["decode_steps"] += int(n_steps)
-            for slot, r in enumerate(slot_req):
-                if r is None:
-                    continue
-                row = out_np[slot]
-                gen[slot].extend(int(t) for t in row[row >= 0])
-                if rem_np[slot] == 0:
-                    r.tokens = np.asarray(gen.pop(slot)[: r.max_new_tokens],
-                                          np.int32)
-                    r.latency = time.perf_counter() - t0
-                    self.stats["tokens_generated"] += len(r.tokens)
-                    slot_req[slot] = None
-                    free.append(slot)
+        self._cache, self._tok, self._pos, self._rem, out, n_steps = \
+            decode(self.params, self._cache, self._tok, self._pos,
+                   self._rem)
+        self.stats["decode_dispatches"] += 1
+        out_np = np.asarray(out)                     # the one host sync
+        rem_np = np.asarray(self._rem)
+        self.stats["decode_steps"] += int(n_steps)
+        now = time.perf_counter()
+        for slot, r in enumerate(self._slot_req):
+            if r is None:
+                continue
+            row = out_np[slot]
+            self._gen[slot].extend(int(t) for t in row[row >= 0])
+            if rem_np[slot] == 0:
+                r.tokens = np.asarray(
+                    self._gen.pop(slot)[: r.max_new_tokens], np.int32)
+                r.latency = now - r.arrival
+                self.stats["tokens_generated"] += len(r.tokens)
+                self._slot_req[slot] = None
+                self._free.append(slot)
+                self._completed.append(r)
+        return int(n_steps)
+
+    def drain_completions(self) -> List[Request]:
+        """Return (and clear) the requests completed since the last drain."""
+        out, self._completed = self._completed, []
+        return out
+
+    def serve(self, reqs: Sequence[Request]) -> List[Request]:
+        """Serve requests to completion: a thin closed loop over the
+        open-loop core (submit all, step until done).
+
+        Safe to interleave with open-loop use of the same engine: the loop
+        stops once *these* requests are done, and completions of requests
+        submitted by other callers stay queued for their
+        ``drain_completions()``."""
+        for r in reqs:
+            self._validate(r)
+        for r in reqs:
+            self.submit(r)
+        while self.busy and any(r.tokens is None for r in reqs):
+            self.step()
+        mine = {id(r) for r in reqs}
+        self._completed = [r for r in self._completed
+                           if id(r) not in mine]
         return list(reqs)
 
     # Legacy wave API (the JaxExecutor calibration path and older callers).
@@ -423,14 +493,18 @@ class JaxExecutor:
     are pure execution (the seed paid XLA compile time inside measurement).
     """
 
-    def __init__(self, arch_cfgs: Dict[str, ArchConfig], seed: int = 0):
+    def __init__(self, arch_cfgs: Dict[str, ArchConfig], seed: int = 0,
+                 **engine_kwargs):
         self.engines: Dict[str, ServingEngine] = {}
-        self.measured: Dict[Tuple[str, int], float] = {}
+        # keyed on (arch, batch, prompt_len): mixed-length calibration runs
+        # are distinct measurements and must not overwrite each other
+        self.measured: Dict[Tuple[str, int, int], float] = {}
         rng = jax.random.PRNGKey(seed)
         for name, cfg in arch_cfgs.items():
             model = build_model(cfg)
             params = model.init(rng)
-            self.engines[name] = ServingEngine(model, params)
+            self.engines[name] = ServingEngine(model, params,
+                                               **engine_kwargs)
 
     def execute(self, arch: str, batch: int, prompt_len: int = 8,
                 max_new: int = 4) -> float:
@@ -441,5 +515,5 @@ class JaxExecutor:
         t0 = time.perf_counter()
         eng.serve(reqs)
         dt = time.perf_counter() - t0
-        self.measured[(arch, batch)] = dt
+        self.measured[(arch, batch, prompt_len)] = dt
         return dt

@@ -1,0 +1,132 @@
+"""EngineExecutor: the real data plane behind an INFaaS worker device.
+
+Implements the worker's ``Executor`` protocol (``repro.core.worker``) over
+per-variant continuous-batching ``ServingEngine`` instances, so the whole
+control plane — per-query variant selection, adaptive batching, the
+monitoring daemon, and two-level autoscaling — drives *live* JAX engines
+instead of the profile-driven simulation:
+
+* ``run(variant, batch)`` builds (lazily) a reduced-config engine for the
+  variant, pushes a batch of synthetic requests through the open-loop
+  ``submit()``/``step()``/``drain_completions()`` core, and returns the
+  measured wall-clock service time. That measured time becomes the job's
+  duration on the worker's (virtual) clock, so queueing, utilization, and
+  autoscaling decisions all reflect real execution speed.
+
+* every measurement is recorded per batch size, and once two distinct
+  batch sizes have been observed the variant's ``VariantProfile`` is
+  re-fit in place (``repro.core.profiler.refit_profile``): t(b) = m*b + c
+  moves from the analytic roofline guess to calibrated reality, and
+  selection improves as measurements accumulate (ROADMAP item: wire
+  measured t(b) back into the variant profiles).
+
+Model weights are built once per architecture and shared across the
+variants (and, via ``model_cache``, across the cluster's workers); each
+variant still gets its own engine so slot state never crosses variants.
+Engines are warmed up at creation, keeping XLA compile time out of the
+measured service times.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import time
+from collections import deque
+from typing import Any, Deque, Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.core import profiler as prof
+from repro.core.abstraction import Variant
+from repro.serving.engine import Request, ServingEngine
+
+
+@dataclasses.dataclass
+class EngineExecutorConfig:
+    """Reduced-scale engine + synthetic request shape for real execution."""
+    max_batch: int = 4          # engine slots (admission queues past this)
+    max_len: int = 32
+    decode_block: int = 4
+    min_bucket: int = 4
+    prompt_len: int = 6         # synthetic request shape (fixed -> one
+    max_new: int = 3            # prefill bucket, zero steady-state compiles)
+    refit_min_points: int = 2   # distinct batch sizes before an m,c refit
+    obs_window: int = 32        # measurements kept per (variant, batch)
+    seed: int = 0
+
+
+class EngineExecutor:
+    """Real executor: worker jobs run on per-variant ``ServingEngine``s.
+
+    ``arch_cfgs`` maps architecture name -> (reduced) ``ArchConfig``; pass
+    a shared ``model_cache`` dict to reuse built params across executors
+    (one per worker) in the same cluster.
+    """
+
+    def __init__(self, arch_cfgs: Dict[str, ArchConfig],
+                 cfg: EngineExecutorConfig = EngineExecutorConfig(),
+                 model_cache: Optional[Dict[str, Tuple[Any, Any]]] = None):
+        self.arch_cfgs = dict(arch_cfgs)
+        self.cfg = cfg
+        self.engines: Dict[str, ServingEngine] = {}      # by variant name
+        # bounded per-(variant, batch) history: refits stay O(obs_window)
+        # per job and memory stays flat in a long-running cluster
+        self.observations: Dict[str, Dict[int, Deque[float]]] = {}
+        self.refits: Dict[str, int] = {}                 # refit count
+        self._models = model_cache if model_cache is not None else {}
+        self._rid = itertools.count()
+
+    # ------------------------------------------------------------------
+    def _model(self, arch: str):
+        entry = self._models.get(arch)
+        if entry is None:
+            import jax
+            from repro.models.model import build_model
+            cfg = self.arch_cfgs[arch]
+            model = build_model(cfg)
+            params = model.init(jax.random.PRNGKey(self.cfg.seed))
+            entry = (model, params)
+            self._models[arch] = entry
+        return entry
+
+    def _engine(self, variant: Variant) -> ServingEngine:
+        eng = self.engines.get(variant.name)
+        if eng is None:
+            model, params = self._model(variant.arch)
+            eng = ServingEngine(
+                model, params,
+                max_batch=min(self.cfg.max_batch,
+                              max(variant.profile.max_batch, 1)),
+                max_len=self.cfg.max_len,
+                decode_block=self.cfg.decode_block,
+                min_bucket=self.cfg.min_bucket)
+            eng.warmup(prompt_lens=[self.cfg.prompt_len])
+            self.engines[variant.name] = eng
+        return eng
+
+    # ------------------------------------------------------------------
+    def run(self, variant: Variant, batch: int) -> float:
+        """Serve one batch of ``batch`` synthetic requests for real; return
+        the measured service time and fold it into the variant's profile."""
+        eng = self._engine(variant)
+        vocab = self.arch_cfgs[variant.arch].vocab
+        n = max(int(batch), 1)
+        t0 = time.perf_counter()
+        for _ in range(n):
+            r = Request(rid=next(self._rid),
+                        prompt=(np.arange(self.cfg.prompt_len,
+                                          dtype=np.int64) % vocab
+                                ).astype(np.int32),
+                        max_new_tokens=self.cfg.max_new, arrival=t0)
+            eng.submit(r)
+        while eng.busy:
+            eng.step()
+        eng.drain_completions()
+        dt = time.perf_counter() - t0
+        obs = self.observations.setdefault(variant.name, {})
+        obs.setdefault(n, deque(maxlen=self.cfg.obs_window)).append(dt)
+        if prof.refit_profile(variant.profile, obs,
+                              min_points=self.cfg.refit_min_points):
+            self.refits[variant.name] = self.refits.get(variant.name, 0) + 1
+        return dt

@@ -3,7 +3,7 @@ master + workers and register the assigned architecture zoo."""
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence, Tuple
+from typing import List, Optional, Sequence
 
 from repro.configs.base import ArchConfig
 from repro.core.api import INFaaS
@@ -42,14 +42,42 @@ class Cluster:
 def make_cluster(n_accel: int = 1, n_cpu: int = 0,
                  archs: Optional[Sequence[ArchConfig]] = None,
                  autoscale: bool = True,
-                 cfg: Optional[MasterConfig] = None) -> Cluster:
+                 cfg: Optional[MasterConfig] = None,
+                 backend: str = "sim",
+                 engine_cfg=None) -> Cluster:
+    """Assemble a cluster.
+
+    ``backend="sim"`` (default): workers answer from profiled t(b) models —
+    any scale, no JAX execution.
+
+    ``backend="real"``: every worker gets an
+    ``repro.serving.executor.EngineExecutor`` — jobs run for real on
+    reduced-config continuous-batching engines (host CPU), measured service
+    times drive the virtual clock, and variant profiles are re-fit from
+    the measurements as they accumulate. Pass a small ``archs`` list (each
+    arch builds real model params) and optionally an
+    ``EngineExecutorConfig`` as ``engine_cfg``.
+    """
+    if backend not in ("sim", "real"):
+        raise ValueError(f"unknown backend {backend!r} (sim|real)")
     loop = EventLoop()
     store = MetadataStore()
     repo = ModelRepository()
+    use_archs = list(archs if archs is not None else serving_archs())
+    executor_factory = None
+    if backend == "real":
+        from repro.serving.executor import (EngineExecutor,
+                                            EngineExecutorConfig)
+        arch_cfgs = {a.name: a.reduced() for a in use_archs}
+        ecfg = engine_cfg or EngineExecutorConfig()
+        model_cache: dict = {}   # share built params across workers
+
+        def executor_factory():
+            return EngineExecutor(arch_cfgs, ecfg, model_cache=model_cache)
     master = Master(store, repo, loop, cfg or MasterConfig(),
-                    autoscale=autoscale)
+                    autoscale=autoscale, executor_factory=executor_factory)
     api = INFaaS(master)
-    for cfgA in (archs if archs is not None else serving_archs()):
+    for cfgA in use_archs:
         master.register_model(cfgA)
     for _ in range(n_accel):
         master.add_worker("accel")

@@ -9,7 +9,7 @@ rank, so restarts resume mid-stream deterministically via the step index.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterator, Optional
+from typing import Dict, Iterator
 
 import numpy as np
 

@@ -7,17 +7,15 @@ for ``train_4k`` shapes.
 from __future__ import annotations
 
 import dataclasses
-import time
-from typing import Any, Callable, Dict, Iterator, Optional, Tuple
+from typing import Any, Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ArchConfig
 from repro.distributed.checkpoint import CheckpointManager
 from repro.models.model import Model
 from repro.training import data as data_lib
-from repro.training.optimizer import (AdamWConfig, AdamWState, adamw_init,
+from repro.training.optimizer import (AdamWConfig, adamw_init,
                                       adamw_update)
 
 

@@ -3,7 +3,6 @@ retention, and crash-restart semantics."""
 import os
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

@@ -1,7 +1,6 @@
 """Unit tests: model-less abstraction, profiler, Algorithm-1 selection,
 decision cache, metadata snapshot/restore."""
 import jax  # noqa: F401  (ensures jax initializes once for the session)
-import numpy as np
 import pytest
 
 from repro.configs.registry import ARCHS

@@ -1,0 +1,155 @@
+"""Open-loop engine core: submit()/step()/drain_completions().
+
+Pins the refactor's two guarantees (ISSUE 2 acceptance):
+
+* equivalence — for a fixed request set, driving the engine open-loop
+  (submit all, step until idle) produces token-for-token the same outputs
+  and the same trace/dispatch counts as the closed ``serve()`` loop, for a
+  dense, an ssm, and a hybrid family; and
+* mid-stream admission — a request submitted between decode segments is
+  admitted into a free slot and completes without restarting in-flight
+  slots (each request prefills exactly once).
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import ARCHS
+from repro.models import build_model
+from repro.serving.engine import Request, ServingEngine
+
+
+def _build(arch):
+    cfg = ARCHS[arch].reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _serial_greedy(model, params, prompt, max_new):
+    toks = list(map(int, prompt))
+    for _ in range(max_new):
+        logits = model.forward(params,
+                               {"tokens": jnp.asarray([toks], jnp.int32)})
+        toks.append(int(jnp.argmax(logits[0, -1])))
+    return toks[len(prompt):]
+
+
+def _mixed_stream(cfg, n=6, seed=1):
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab,
+                                        size=int(rng.integers(3, 12))
+                                        ).astype(np.int32),
+                    max_new_tokens=int(rng.integers(1, 6)))
+            for i in range(n)]
+
+
+@pytest.mark.parametrize("arch", ["llama3.2-1b", "xlstm-1.3b",
+                                  "zamba2-1.2b"])
+def test_open_loop_matches_serve(arch):
+    """submit()+step() loop == serve(): same tokens, same trace and
+    dispatch counts, across dense + ssm + hybrid families."""
+    cfg, model, params = _build(arch)
+    kw = dict(max_batch=3, max_len=64, decode_block=4, min_bucket=4)
+    closed = ServingEngine(model, params, **kw)
+    closed_reqs = _mixed_stream(cfg)
+    closed.serve(closed_reqs)
+    closed_by_rid = {r.rid: r for r in closed_reqs}
+
+    opened = ServingEngine(model, params, **kw)
+    reqs = _mixed_stream(cfg)
+    for r in reqs:
+        opened.submit(r)
+    steps = 0
+    while opened.busy:
+        steps += opened.step()
+    done = opened.drain_completions()
+
+    assert sorted(r.rid for r in done) == [r.rid for r in reqs]
+    for r in reqs:
+        np.testing.assert_array_equal(
+            np.asarray(r.tokens), np.asarray(closed_by_rid[r.rid].tokens),
+            err_msg=f"{arch}: rid={r.rid}")
+    for key in ("prefill_traces", "decode_traces"):
+        assert opened.stats[key] == closed.stats[key], \
+            (key, opened.stats, closed.stats)
+    assert steps == opened.stats["decode_steps"]
+
+
+def test_open_loop_dispatch_counts_match_serve():
+    """First pass through each engine: identical dispatch counts too."""
+    cfg, model, params = _build("llama3.2-1b")
+    kw = dict(max_batch=3, max_len=64, decode_block=4, min_bucket=4)
+    closed = ServingEngine(model, params, **kw)
+    closed.serve(_mixed_stream(cfg))
+    opened = ServingEngine(model, params, **kw)
+    for r in _mixed_stream(cfg):
+        opened.submit(r)
+    while opened.busy:
+        opened.step()
+    assert opened.stats == closed.stats
+
+
+def test_mid_stream_admission():
+    """A request submitted between segments joins the next step() and the
+    in-flight request keeps decoding in its slot (no re-prefill)."""
+    cfg, model, params = _build("llama3.2-1b")
+    eng = ServingEngine(model, params, max_batch=2, max_len=32,
+                        decode_block=2, min_bucket=4)
+    r1 = Request(rid=1, prompt=np.arange(5, dtype=np.int32) % cfg.vocab,
+                 max_new_tokens=7)
+    eng.submit(r1)
+    n = eng.step()
+    assert 0 < n <= 2
+    assert eng.busy and r1.tokens is None        # r1 is mid-decode
+    # arrives between segments, into the free slot
+    r2 = Request(rid=2, prompt=np.arange(6, dtype=np.int32) % cfg.vocab,
+                 max_new_tokens=3)
+    eng.submit(r2)
+    while eng.busy:
+        eng.step()
+    done = eng.drain_completions()
+    assert sorted(r.rid for r in done) == [1, 2]
+    # each request prefilled exactly once: the in-flight slot was never
+    # restarted by the mid-stream admission
+    assert eng.stats["prefill_dispatches"] == 2, eng.stats
+    assert eng.stats["admitted"] == 2, eng.stats
+    for r in (r1, r2):
+        want = _serial_greedy(model, params, r.prompt, r.max_new_tokens)
+        np.testing.assert_array_equal(np.asarray(r.tokens),
+                                      np.asarray(want, np.int32),
+                                      err_msg=f"rid={r.rid}")
+    assert r1.latency >= r2.latency >= 0.0       # both clocked from arrival
+
+
+def test_serve_interleaved_with_open_loop_submits():
+    """serve() on an engine with an open-loop request in flight must not
+    swallow that request's completion record."""
+    cfg, model, params = _build("llama3.2-1b")
+    eng = ServingEngine(model, params, max_batch=2, max_len=32,
+                        decode_block=2, min_bucket=4)
+    r0 = Request(rid=0, prompt=np.arange(4, dtype=np.int32) % cfg.vocab,
+                 max_new_tokens=2)
+    eng.submit(r0)                      # open-loop caller, not yet stepped
+    r1 = Request(rid=1, prompt=np.arange(5, dtype=np.int32) % cfg.vocab,
+                 max_new_tokens=2)
+    eng.serve([r1])
+    assert r1.tokens is not None
+    # r0 was co-served but its completion stays for its own driver
+    while eng.busy:
+        eng.step()
+    assert [r.rid for r in eng.drain_completions()] == [0]
+    assert r0.tokens is not None
+
+
+def test_step_on_idle_engine_is_a_noop():
+    cfg, model, params = _build("llama3.2-1b")
+    eng = ServingEngine(model, params, max_batch=2, max_len=32,
+                        decode_block=2, min_bucket=4)
+    assert not eng.busy
+    assert eng.step() == 0
+    assert eng.stats["decode_dispatches"] == 0
+    assert eng.drain_completions() == []

@@ -1,0 +1,138 @@
+"""The Executor seam: control plane over real engines (ISSUE 2 tentpole).
+
+``make_cluster(backend="real")`` serves a mixed stream through
+master -> variant selection -> ``EngineExecutor`` (real continuous-batching
+engines on reduced configs), and measured service times re-fit variant
+profiles in place — the closed loop between data plane and control plane.
+"""
+import pytest
+
+from repro.configs.registry import ARCHS
+from repro.core.master import MasterConfig
+from repro.core.worker import Executor, SimExecutor
+from repro.sim.cluster import make_cluster
+
+LLAMA = ARCHS["llama3.2-1b"]
+
+
+def _done(q):
+    return q.finish >= 0 and not q.failed
+
+
+def test_sim_executor_is_the_default_and_satisfies_protocol():
+    c = make_cluster(n_accel=1, archs=[LLAMA], autoscale=False)
+    w = next(iter(c.master.workers.values()))
+    assert isinstance(w.executor, SimExecutor)
+    assert isinstance(w.executor, Executor)
+    v = next(iter(c.store.registry.variants.values()))
+    assert w.executor.run(v, 4) == pytest.approx(v.profile.latency(4))
+
+
+def test_real_backend_serves_and_calibrates_profiles():
+    """End-to-end acceptance: a mixed stream runs through selection into
+    real engines, and at least one variant's m/c is re-fit from measured
+    service times."""
+    cfg = MasterConfig(worker_autoscale=False)
+    c = make_cluster(n_accel=1, archs=[LLAMA], autoscale=False, cfg=cfg,
+                     backend="real")
+    before = {v.name: (v.profile.m, v.profile.c)
+              for v in c.store.registry.variants.values()}
+    assert all(v.profile.source == "analytic"
+               for v in c.store.registry.variants.values())
+    # one early query (a batch-1 job), then a burst that the worker's
+    # adaptive batching packs into a larger job -> two distinct batch
+    # sizes observed -> refit
+    qs = [c.api.online_query(mod_arch=LLAMA.name, latency_ms=600_000)]
+    c.run_until(30.0)
+    qs += [c.api.online_query(mod_arch=LLAMA.name, latency_ms=600_000)
+           for _ in range(7)]
+    c.run_until(300.0)
+    assert all(_done(q) for q in qs), \
+        [(q.qid, q.failed, q.finish) for q in qs]
+
+    w = next(iter(c.master.workers.values()))
+    ex = w.executor
+    assert ex.engines, "no real engine was ever built"
+    # real engines actually decoded tokens for every job
+    assert sum(e.stats["tokens_generated"]
+               for e in ex.engines.values()) > 0
+    batches = {b for obs in ex.observations.values() for b in obs}
+    assert len(batches) >= 2, batches
+
+    measured = [v for v in c.store.registry.variants.values()
+                if v.profile.source == "measured"]
+    assert measured, "no profile was re-fit from measurements"
+    for v in measured:
+        assert (v.profile.m, v.profile.c) != before[v.name]
+        assert v.profile.latency(1) > 0
+        # peak_qps was recomputed against the measured fit
+        assert v.profile.peak_qps == pytest.approx(
+            v.profile.max_batch / v.profile.latency(v.profile.max_batch))
+
+
+def test_real_backend_queries_see_measured_latency():
+    """Virtual-clock query latency reflects real measured service time,
+    not the analytic roofline guess."""
+    cfg = MasterConfig(worker_autoscale=False)
+    c = make_cluster(n_accel=1, archs=[LLAMA], autoscale=False, cfg=cfg,
+                     backend="real")
+    q = c.api.online_query(mod_arch=LLAMA.name, latency_ms=600_000)
+    c.run_until(60.0)
+    assert _done(q)
+    w = next(iter(c.master.workers.values()))
+    obs = [t for per_b in w.executor.observations.values()
+           for ts in per_b.values() for t in ts]
+    assert obs
+    # service portion of the query latency equals a measured duration
+    assert q.finish - q.start == pytest.approx(obs[0])
+
+
+def test_usecase_query_redispatch_reselects():
+    """Regression (ISSUE 2 satellite): a use-case query that cannot be
+    placed yet must retry via select_usecase — not fail because it carries
+    neither arch nor variant."""
+    c = make_cluster(n_accel=0, n_cpu=0, archs=[LLAMA], autoscale=False)
+    q = c.api.online_query(task="text-generation", dataset="openwebtext",
+                           accuracy=0.5, latency_ms=600_000)
+    assert q.task == "text-generation" and q.dataset == "openwebtext"
+    # capacity appears only after the query has started retrying
+    c.loop.schedule(0.6, lambda: c.master.add_worker("accel"))
+    c.run_until(120.0)
+    assert _done(q), (q.failed, q.finish)
+    assert q.variant
+
+
+def test_variant_query_redispatch_reselects():
+    """Same hole as above for variant-named queries: the user's mod_var
+    choice must survive a failed first dispatch and retry."""
+    c = make_cluster(n_accel=0, n_cpu=0, archs=[LLAMA], autoscale=False)
+    vname = next(v.name for v in c.store.registry.variants.values()
+                 if v.hardware == "tpu-v5e-1")
+    q = c.api.online_query(mod_var=vname, latency_ms=600_000)
+    assert q.variant == vname
+    c.loop.schedule(0.6, lambda: c.master.add_worker("accel"))
+    c.run_until(120.0)
+    assert _done(q), (q.failed, q.finish)
+    assert q.variant == vname
+
+
+def test_variant_objects_stay_hashable():
+    """The frozen Variant hashes its (identity-hashed, mutable) profile;
+    sets/dict keys of Variants must keep working."""
+    c = make_cluster(n_accel=1, archs=[LLAMA], autoscale=False)
+    vs = list(c.store.registry.variants.values())
+    assert len({v for v in vs}) == len(vs)
+    assert vs[0] in {vs[0]}
+
+
+def test_jax_executor_measured_keyed_by_prompt_len():
+    """Regression (ISSUE 2 satellite): mixed-length calibration runs must
+    not overwrite each other."""
+    from repro.serving.engine import JaxExecutor
+    ex = JaxExecutor({LLAMA.name: LLAMA.reduced()},
+                     max_batch=2, max_len=32, decode_block=4, min_bucket=4)
+    ex.execute(LLAMA.name, batch=2, prompt_len=4, max_new=2)
+    ex.execute(LLAMA.name, batch=2, prompt_len=8, max_new=2)
+    keys = set(ex.measured)
+    assert keys == {(LLAMA.name, 2, 4), (LLAMA.name, 2, 8)}
+    assert all(t > 0 for t in ex.measured.values())

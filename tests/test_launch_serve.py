@@ -1,0 +1,39 @@
+"""Smoke tests for the cluster serving launcher (``repro.launch.serve``):
+the simulated path, the real-backend path, and the standalone real-engine
+demo all run end to end with tiny configurations."""
+import pytest
+
+from repro.launch import serve
+
+
+def test_launch_sim_path_smoke(capsys):
+    serve.main(["--arch", "llama3.2-1b", "--workers", "1",
+                "--cpu-workers", "0", "--rate", "5", "--duration", "6",
+                "--slo-ms", "5000", "--no-autoscale"])
+    out = capsys.readouterr().out
+    assert "served=" in out
+    assert "workers alive at end: 1" in out
+
+
+def test_launch_real_backend_smoke(capsys):
+    serve.main(["--arch", "llama3.2-1b", "--backend", "real",
+                "--workers", "1", "--cpu-workers", "0", "--rate", "3",
+                "--duration", "6", "--slo-ms", "600000", "--no-autoscale"])
+    out = capsys.readouterr().out
+    assert "served=" in out
+    # at least one profile was re-fit from real measurements
+    assert "variants re-fit from real measurements:" in out
+    n = int(out.rsplit("variants re-fit from real measurements:", 1)[1])
+    assert n >= 1
+
+
+def test_launch_real_backend_rejects_all_archs():
+    with pytest.raises(SystemExit):
+        serve.main(["--arch", "all", "--backend", "real"])
+
+
+def test_launch_real_engine_demo_smoke(capsys):
+    serve.main(["--real-engine", "--arch", "llama3.2-1b",
+                "--real-reqs", "4", "--real-slots", "2"])
+    out = capsys.readouterr().out
+    assert "real engine" in out and "tok/s" in out

@@ -1,6 +1,5 @@
 """Hypothesis property sweeps for the Pallas kernels (interpret mode):
 random shapes within the kernels' block constraints, allclose vs ref."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -1,6 +1,5 @@
 """Property tests on model-math invariants: the chunkwise-parallel forms of
 Mamba2 SSD and mLSTM must match their step-by-step recurrences exactly."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -70,7 +69,8 @@ def test_mlstm_state_carry_across_calls(seed):
     """Splitting a sequence across two chunked calls == one call."""
     b, S, h, d, chunk = 1, 32, 2, 8, 8
     rng = np.random.default_rng(seed)
-    mk = lambda *shape: jnp.asarray(rng.normal(size=shape), jnp.float32)
+    def mk(*shape):
+        return jnp.asarray(rng.normal(size=shape), jnp.float32)
     q, k, v = mk(b, S, h, d), mk(b, S, h, d), mk(b, S, h, d)
     li = mk(b, S, h)
     lf = jnp.asarray(-np.abs(rng.normal(size=(b, S, h))) - 0.05, jnp.float32)

@@ -75,7 +75,6 @@ def test_selection_respects_batch_and_slo(batch, slo):
 def test_sim_invariants_under_random_load(seed, rate):
     """Random Poisson load: memory accounting, replica caps, and query
     timestamps stay consistent throughout."""
-    from repro.sim import hardware as HW
     c = make_cluster(n_accel=1, n_cpu=1, archs=[ARCHS["llama3.2-1b"]],
                      autoscale=False)
     poisson_arrivals(

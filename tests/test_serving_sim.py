@@ -1,6 +1,5 @@
 """Integration tests: master + workers + two-level autoscaler + offline
 sharing + fault tolerance, on the discrete-event cluster."""
-import numpy as np
 import pytest
 
 from repro.configs.registry import ARCHS
@@ -173,7 +172,7 @@ def test_worker_failure_redispatch():
 def test_hedged_requests_cut_straggler_latency():
     cfg = MasterConfig(hedge_enabled=True, hedge_factor=2.0)
     c = make_cluster(n_accel=1, archs=[LLAMA], autoscale=False, cfg=cfg)
-    slow = c.master.add_worker("accel", name="straggler", slowdown=25.0)
+    c.master.add_worker("accel", name="straggler", slowdown=25.0)
     # preload the same variant on both workers
     v = [x for x in c.store.registry.variants.values()
          if x.hardware == "tpu-v5e-1" and x.batch_opt == 8
@@ -183,7 +182,6 @@ def test_hedged_requests_cut_straggler_latency():
     c.run_until(60.0)
     # route a query to the straggler explicitly
     q = c.master.online_query(n_inputs=1, slo=30.0, variant=v.name)
-    from repro.core.selection import Selection
     c.run_until(300.0)
     assert _done(q)
     slow_latency = v.profile.latency(1) * 25.0

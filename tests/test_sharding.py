@@ -3,7 +3,6 @@ trees must exactly mirror the parameter/cache pytree structures (this is
 what makes the multi-pod dry-run's in_shardings valid), and every sharded
 dim must divide the production mesh axes."""
 import jax
-import jax.numpy as jnp
 import pytest
 from jax.sharding import PartitionSpec as P
 
@@ -18,7 +17,8 @@ POD = MeshAxes(data=("data",), model="model", data_size=16, model_size=16)
 MULTIPOD = MeshAxes(data=("pod", "data"), model="model", data_size=32,
                     model_size=16)
 
-IS_SPEC = lambda x: isinstance(x, P)
+def IS_SPEC(x):
+    return isinstance(x, P)
 
 
 def _struct(tree):
@@ -34,8 +34,6 @@ def test_param_specs_match_init_structure(arch, ax):
     specs = param_specs(cfg, ax)
     assert jax.tree.structure(shapes) == _struct(specs), arch
     # rank match + divisibility of every sharded dim
-    sizes = {**{a: ax.data_size // (ax.data_size // 16) for a in ax.data},
-             ax.model: ax.model_size}
     axis_size = {"data": 16, "pod": 2, "model": 16}
     for leaf, spec in zip(jax.tree.leaves(shapes),
                           jax.tree.leaves(specs, is_leaf=IS_SPEC)):

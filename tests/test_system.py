@@ -1,8 +1,6 @@
 """End-to-end behaviour test for the full INFaaS system: register models,
 serve all three query granularities under load, autoscale, survive a worker
 failure, and recover the metadata store from a snapshot."""
-import numpy as np
-
 from repro.configs.registry import ARCHS
 from repro.core.metadata import MetadataStore
 from repro.sim.cluster import make_cluster
