@@ -8,6 +8,7 @@ from __future__ import annotations
 from typing import List
 
 from repro.configs.registry import ARCHS
+from repro.core.api import QuerySpec
 from repro.sim.cluster import make_cluster
 from repro.sim.workload import poisson_arrivals, ramp_rate
 from benchmarks.common import Row, steady_metrics
@@ -18,13 +19,14 @@ ARCH = ARCHS["llama3.2-1b"]
 def _run(with_offline: bool, t_end: float = 80.0):
     c = make_cluster(n_accel=1, archs=[ARCH], autoscale=False)
     if with_offline:
-        job = c.api.offline_query(mod_arch=ARCH.name, n_inputs=5000)
+        job = c.api.submit(QuerySpec.arch(ARCH.name, mode="offline",
+                                          n_inputs=5000)).job
     else:
         job = None
     rate = ramp_rate(t_end, 2.0, 120.0)
     poisson_arrivals(
         c.loop, rate,
-        lambda t: c.api.online_query(mod_arch=ARCH.name, latency_ms=500),
+        lambda t: c.api.submit(QuerySpec.arch(ARCH.name, latency_ms=500)),
         t_end=t_end, seed=11)
     c.run_until(t_end + 30.0)
     online = [q for q in c.master.metrics if q.kind == "online"]

@@ -10,6 +10,7 @@ from __future__ import annotations
 from typing import Dict, List
 
 from repro.configs.registry import ARCHS
+from repro.core.api import QuerySpec
 from repro.core.master import MasterConfig
 from repro.sim.cluster import make_cluster
 from repro.sim.workload import poisson_arrivals
@@ -41,9 +42,9 @@ def _load_and_slo(c, peak_rate: float, seed: int, variant: str = None):
     def fire(t):
         # baselines pin the user-chosen variant; INFaaS is model-less
         if variant is not None:
-            c.api.online_query(mod_var=variant, latency_ms=slo_ms(t))
+            c.api.submit(QuerySpec.variant(variant, latency_ms=slo_ms(t)))
         else:
-            c.api.online_query(mod_arch=ARCH.name, latency_ms=slo_ms(t))
+            c.api.submit(QuerySpec.arch(ARCH.name, latency_ms=slo_ms(t)))
 
     poisson_arrivals(c.loop, rate, fire, t_end=total, seed=seed)
     c.run_until(total + 20.0)

@@ -11,6 +11,7 @@ from typing import Dict, List
 
 import numpy as np
 
+from repro.core.api import QuerySpec
 from repro.core.master import MasterConfig
 from repro.sim.cluster import make_cluster, serving_archs
 from repro.sim.workload import (popularity_split, poisson_arrivals,
@@ -40,15 +41,17 @@ def _drive(c, infaas_mode: bool, with_offline: bool, seed: int):
     def fire(t):
         a = names[rng.choice(len(names), p=probs)]
         if infaas_mode:
-            c.api.online_query(mod_arch=a, latency_ms=slos[a])
+            c.api.submit(QuerySpec.arch(a, latency_ms=slos[a]))
         else:
-            c.api.online_query(mod_var=chosen[a].name, latency_ms=slos[a])
+            c.api.submit(QuerySpec.variant(chosen[a].name,
+                                           latency_ms=slos[a]))
 
     tracker = UtilTracker(c, t_end=T_END)
     poisson_arrivals(c.loop, step_rate(LEVELS), fire, t_end=T_END, seed=seed)
     if with_offline:
         for _ in range(8):
-            c.api.offline_query(mod_arch="llama3.2-1b", n_inputs=500)
+            c.api.submit(QuerySpec.arch("llama3.2-1b", mode="offline",
+                                        n_inputs=500))
     c.run_until(T_END + 30.0)
     m = steady_metrics(c.master.metrics, 0.0, T_END, warmup=20.0)
     m.update(tracker.summary())

@@ -9,6 +9,7 @@ from __future__ import annotations
 from typing import List
 
 from repro.configs.registry import ARCHS
+from repro.core.api import QuerySpec
 from repro.sim.cluster import make_cluster
 from repro.sim.workload import poisson_arrivals
 from benchmarks.common import Row, steady_metrics
@@ -34,7 +35,7 @@ def _drive(kind: str, batch_opt: int, replicas: int, rate: float,
     c.run_until(10.0)
     poisson_arrivals(
         c.loop, lambda t: rate,
-        lambda t: c.api.online_query(mod_var=v.name, latency_ms=60_000),
+        lambda t: c.api.submit(QuerySpec.variant(v.name, latency_ms=60_000)),
         t_end=t_end, seed=7)
     c.run_until(10.0 + t_end + 10.0)
     m = steady_metrics(c.master.metrics, 10.0, 10.0 + t_end, warmup=5.0)

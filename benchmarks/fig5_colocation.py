@@ -9,6 +9,7 @@ from __future__ import annotations
 from typing import Dict, List
 
 from repro.configs.registry import ARCHS
+from repro.core.api import QuerySpec
 from repro.sim.cluster import make_cluster
 from repro.sim.workload import poisson_arrivals
 from benchmarks.common import Row, steady_metrics
@@ -42,8 +43,8 @@ def _run(shared: bool, rate_frac: float, autoscale: bool = False,
         vn = pick[arch].name
         poisson_arrivals(
             c.loop, (lambda r: lambda t: r)(rate),
-            (lambda vv: lambda t: c.api.online_query(
-                mod_var=vv, latency_ms=1000))(vn),
+            (lambda vv: lambda t: c.api.submit(
+                QuerySpec.variant(vv, latency_ms=1000)))(vn),
             t_end=t_end, seed=seed)
     c.run_until(10.0 + t_end + 20.0)
     out = {}

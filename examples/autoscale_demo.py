@@ -4,6 +4,7 @@ model's variants as the load swings (paper Fig. 11 in miniature).
 Run:  PYTHONPATH=src python examples/autoscale_demo.py
 """
 from repro.configs.registry import ARCHS
+from repro.core.api import QuerySpec
 from repro.sim.cluster import make_cluster
 from repro.sim.workload import poisson_arrivals
 
@@ -36,8 +37,8 @@ def main() -> None:
     # phase 1: light load (CPU should suffice)
     print("== phase 1: light load, relaxed 500ms SLO ==")
     poisson_arrivals(c.loop, lambda t: 4.0,
-                     lambda t: c.api.online_query(mod_arch=ARCH.name,
-                                                  latency_ms=500),
+                     lambda t: c.api.submit(
+                         QuerySpec.arch(ARCH.name, latency_ms=500)),
                      t_end=20.0, seed=1)
     c.run_until(20.0)
     snapshot(c, 20)
@@ -45,8 +46,8 @@ def main() -> None:
     # phase 2: heavy load + strict SLO (expect upgrade to batched accel)
     print("== phase 2: heavy load, strict 50ms SLO ==")
     poisson_arrivals(c.loop, lambda t: peak_b8 * 0.45,
-                     lambda t: c.api.online_query(mod_arch=ARCH.name,
-                                                  latency_ms=50),
+                     lambda t: c.api.submit(
+                         QuerySpec.arch(ARCH.name, latency_ms=50)),
                      t_end=40.0, seed=2)
     c.run_until(65.0)
     snapshot(c, 65)

@@ -5,6 +5,7 @@ heartbeats and queries are re-dispatched.
 Run:  PYTHONPATH=src python examples/multi_tenant.py
 """
 from repro.configs.registry import ARCHS
+from repro.core.api import QuerySpec
 from repro.sim.cluster import make_cluster
 from repro.sim.workload import poisson_arrivals
 
@@ -16,19 +17,18 @@ def main() -> None:
 
     # tenant A: latency-sensitive llama traffic; tenant B: accurate yi-9b
     poisson_arrivals(c.loop, lambda t: 40.0,
-                     lambda t: c.api.online_query(
-                         submitter="tenantA", mod_arch="llama3.2-1b",
-                         latency_ms=50),
+                     lambda t: c.api.submit(QuerySpec.arch(
+                         "llama3.2-1b", latency_ms=50, user="tenantA")),
                      t_end=60.0, seed=1)
     poisson_arrivals(c.loop, lambda t: 10.0,
-                     lambda t: c.api.online_query(
-                         submitter="tenantB", task="text-generation",
-                         dataset="openwebtext", accuracy=0.71,
-                         latency_ms=200),
+                     lambda t: c.api.submit(QuerySpec.usecase(
+                         "text-generation", "openwebtext",
+                         min_accuracy=0.71, latency_ms=200,
+                         user="tenantB")),
                      t_end=60.0, seed=2)
     # tenant B also runs an offline batch job in the slack
-    job = c.api.offline_query(submitter="tenantB", mod_arch="yi-9b",
-                              n_inputs=400)
+    job = c.api.submit(QuerySpec.arch("yi-9b", mode="offline",
+                                      n_inputs=400, user="tenantB")).job
 
     c.run_until(25.0)
     # kill a worker mid-run: heartbeats stop, master re-routes

@@ -1,11 +1,11 @@
 """Quickstart: register models, inspect the model-less registry, and issue
-online queries at all three granularities (variant / arch / use-case).
+queries at all three granularities (variant / arch / use-case) through the
+typed QuerySpec/QueryHandle API.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
-import sys
-
 from repro.configs.registry import ARCHS
+from repro.core.api import QuerySpec
 from repro.sim.cluster import make_cluster
 
 
@@ -25,23 +25,32 @@ def main() -> None:
             print(f"     e.g. {v['name']}  lat_b1={v['latency_b1_ms']:.2f}ms"
                   f" load={v['load_ms']:.0f}ms mem={v['mem_mb']:.0f}MB")
 
-    print("\n== online queries ==")
+    print("\n== online queries (QuerySpec -> QueryHandle) ==")
     # 1. use-case granularity: task + dataset + accuracy + latency
-    q1 = api.online_query(task="text-generation", dataset="openwebtext",
-                          accuracy=0.60, latency_ms=50)
+    h1 = api.submit(QuerySpec.usecase("text-generation", "openwebtext",
+                                      min_accuracy=0.60, latency_ms=50))
     # 2. arch granularity: architecture + latency
-    q2 = api.online_query(mod_arch="yi-9b", latency_ms=100)
+    h2 = api.submit(QuerySpec.arch("yi-9b", latency_ms=100))
     # 3. expert granularity: exact variant
     vname = next(iter(cluster.store.registry.variants))
-    q3 = api.online_query(mod_var=vname)
-    cluster.run_until(30.0)
-    for name, q in (("use-case", q1), ("arch", q2), ("variant", q3)):
-        status = "FAILED" if q.failed else f"{q.latency*1e3:.1f} ms"
-        print(f"  {name:9s} -> served by {q.variant:45s} latency={status}")
+    h3 = api.submit(QuerySpec.variant(vname))
+    for name, h in (("use-case", h1), ("arch", h2), ("variant", h3)):
+        # result() pumps the event loop until the query completes — no
+        # run_until horizon guessing, no callback nesting
+        res = h.result(timeout=60.0)
+        status = "FAILED" if res.failed else f"{res.latency*1e3:.1f} ms"
+        verdict = {True: "SLO met", False: "SLO VIOLATED",
+                   None: "no SLO"}[res.slo_met]
+        print(f"  {name:9s} -> {res.variant:45s} latency={status}")
+        print(f"            queue={res.queue*1e3:.1f}ms "
+              f"load={res.load*1e3:.1f}ms compute={res.compute*1e3:.1f}ms "
+              f"[{verdict}]")
 
     print("\n== offline (best-effort) query ==")
-    job = api.offline_query(mod_arch="llama3.2-1b", n_inputs=200)
-    cluster.run_until(120.0)
+    hj = api.submit(QuerySpec.arch("llama3.2-1b", mode="offline",
+                                   n_inputs=200))
+    job = hj.job
+    cluster.run_until(cluster.loop.now() + 120.0)
     print(f"  processed {job.processed}/{job.total_inputs} inputs "
           "in slack capacity")
 

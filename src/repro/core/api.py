@@ -1,24 +1,349 @@
-"""INFaaS user API (paper Table 1).
+"""INFaaS user API (paper Table 1): typed, payload-carrying model-less
+queries.
 
-Thin facade over the master implementing the four calls with the three
-query granularities of the model-less abstraction:
+The model-less abstraction lets a developer state *requirements* at one of
+three granularities and leaves variant choice to the system (paper §3.2).
+This module exposes that contract as two types:
 
-    register_model(modelBinary/cfg, ..., submitter, isPrivate)
-    model_info(task, dataset, accuracy)
-    online_query(inputs, modVar | modArch+latency | task+dataset+acc+latency)
-    offline_query(inputPath, outputPath, modVar | modArch | use-case)
+``QuerySpec`` — an immutable description of one query: a tagged target
+
+    QuerySpec.variant(name)                          # expert granularity
+    QuerySpec.arch(name, latency_ms=...)             # arch + SLO
+    QuerySpec.usecase(task, dataset,                 # fully model-less
+                      min_accuracy=..., latency_ms=...)
+
+plus ``user`` (submitter, for multi-tenant access control), ``mode``
+("online" | "offline" best-effort), and an optional ``payload`` of real
+inputs — token-id prompts with a ``max_new_tokens`` budget. Payload-
+carrying specs served by a ``backend="real"`` cluster run their actual
+prompts through the continuous-batching ``ServingEngine``; without a
+payload the worker accounts ``n_inputs`` synthetic inputs (the simulator's
+contract). A spec is a value: re-dispatch after a failure, hedged
+duplicates, and offline retries all *replay the spec* rather than
+re-deriving the granularity from sentinel fields.
+
+``QueryHandle`` — the future returned by ``submit(spec)``:
+
+    h = api.submit(QuerySpec.arch("llama3.2-1b", latency_ms=100))
+    res = h.result(timeout=60.0)     # pumps the event loop until done
+    res.outputs                      # per-input generated token ids (real)
+    res.queue, res.load, res.compute # per-stage latency breakdown
+    res.slo_met                      # SLO verdict (None when no SLO)
+
+``done`` / ``add_done_callback`` give the non-blocking form; callbacks fire
+in registration order, immediately if the handle already completed.
+
+The pre-redesign kwargs forms (``online_query(mod_arch=..., ...)`` /
+``offline_query(...)``) survive as thin deprecation shims over
+``QuerySpec`` — they build the equivalent spec, submit it, and return the
+raw ``Query`` / ``OfflineJob``, so existing call sites behave identically.
+
+Also here: ``register_model(modelBinary/cfg, submitter, isPrivate)`` and
+``model_info(task, dataset, accuracy)`` from Table 1.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, List, Optional
+import dataclasses
+import warnings
+from typing import (TYPE_CHECKING, Any, Callable, Dict, List, Optional,
+                    Sequence, Tuple, Union)
 
 from repro.configs.base import ArchConfig
-from repro.core.master import Master
 from repro.core.worker import OfflineJob, Query
 
+if TYPE_CHECKING:                                    # no runtime cycle:
+    from repro.core.master import Master             # master imports us
 
+
+# ----------------------------------------------------------------------
+# the tagged target: exactly one of the three granularities
+@dataclasses.dataclass(frozen=True)
+class VariantTarget:
+    """Expert granularity: the user names the exact model-variant. ``slo``
+    is not used for selection (the variant is pinned) but still yields the
+    SLO verdict on the result."""
+    name: str
+    slo: Optional[float] = None      # seconds
+
+    granularity = "variant"
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchTarget:
+    """Architecture granularity: the system picks the variant."""
+    name: str
+    slo: Optional[float] = None      # seconds
+
+    granularity = "arch"
+
+
+@dataclasses.dataclass(frozen=True)
+class UseCaseTarget:
+    """Fully model-less: (task, dataset, min accuracy) -> the system picks
+    architecture and variant."""
+    task: str
+    dataset: str
+    min_accuracy: float = 0.0
+    slo: Optional[float] = None      # seconds
+
+    granularity = "usecase"
+
+
+Target = Union[VariantTarget, ArchTarget, UseCaseTarget]
+
+
+def _slo_seconds(slo: Optional[float],
+                 latency_ms: Optional[float]) -> Optional[float]:
+    if slo is not None and latency_ms is not None:
+        raise ValueError("give slo (seconds) or latency_ms, not both")
+    if latency_ms is not None:
+        return latency_ms / 1e3
+    return slo
+
+
+@dataclasses.dataclass(frozen=True)
+class QueryPayload:
+    """Real inputs for a query: token-id prompts + a decode budget.
+
+    Stored as nested tuples so the spec stays immutable/hashable; use
+    ``QueryPayload.of(...)`` to build one from lists / numpy arrays. On a
+    ``backend="real"`` cluster each prompt becomes one
+    ``serving.engine.Request`` and the generated token ids come back as
+    ``QueryResult.outputs`` (one array per prompt, submission order). The
+    engine enforces ``len(prompt) + max_new_tokens <= max_len``.
+    """
+    prompts: Tuple[Tuple[int, ...], ...]
+    max_new_tokens: int = 4
+
+    def __post_init__(self):
+        if not self.prompts:
+            raise ValueError("payload needs at least one prompt")
+        if any(len(p) == 0 for p in self.prompts):
+            raise ValueError("payload prompts must be non-empty")
+        if self.max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1")
+
+    @classmethod
+    def of(cls, prompts: Sequence[Sequence[int]],
+           max_new_tokens: int = 4) -> "QueryPayload":
+        return cls(tuple(tuple(int(t) for t in p) for p in prompts),
+                   max_new_tokens=max_new_tokens)
+
+    def __len__(self) -> int:
+        return len(self.prompts)
+
+
+@dataclasses.dataclass(frozen=True)
+class QuerySpec:
+    """One immutable query: tagged target + user + mode + optional payload.
+
+    ``n_inputs`` is the batch the control plane accounts for; with a
+    payload it must equal ``len(payload)`` (constructors derive it).
+    Offline mode is best-effort and therefore rejects targets with an SLO
+    (paper §3.2: offline has no latency option).
+    """
+    target: Target
+    user: str = "public"
+    mode: str = "online"             # "online" | "offline"
+    n_inputs: int = 1
+    payload: Optional[QueryPayload] = None
+
+    def __post_init__(self):
+        if not isinstance(self.target,
+                          (VariantTarget, ArchTarget, UseCaseTarget)):
+            raise TypeError(
+                f"target must be one of VariantTarget | ArchTarget | "
+                f"UseCaseTarget, got {type(self.target).__name__}")
+        if self.mode not in ("online", "offline"):
+            raise ValueError(f"mode must be online|offline, got {self.mode!r}")
+        if self.mode == "offline" and self.target.slo is not None:
+            raise ValueError("offline queries are best-effort: no SLO "
+                             "(paper Table 1 has no offline latency option)")
+        if self.n_inputs < 1:
+            raise ValueError("n_inputs must be >= 1")
+        if self.payload is not None and self.n_inputs != len(self.payload):
+            raise ValueError(
+                f"n_inputs={self.n_inputs} != len(payload)="
+                f"{len(self.payload)}: one accounted input per prompt")
+
+    # -- constructors (one per granularity) ----------------------------
+    @classmethod
+    def variant(cls, name: str, *, slo: Optional[float] = None,
+                latency_ms: Optional[float] = None, user: str = "public",
+                mode: str = "online", n_inputs: Optional[int] = None,
+                payload: Optional[QueryPayload] = None) -> "QuerySpec":
+        return cls(VariantTarget(name, _slo_seconds(slo, latency_ms)),
+                   user=user, mode=mode,
+                   n_inputs=cls._n(n_inputs, payload), payload=payload)
+
+    @classmethod
+    def arch(cls, name: str, *, slo: Optional[float] = None,
+             latency_ms: Optional[float] = None, user: str = "public",
+             mode: str = "online", n_inputs: Optional[int] = None,
+             payload: Optional[QueryPayload] = None) -> "QuerySpec":
+        return cls(ArchTarget(name, _slo_seconds(slo, latency_ms)),
+                   user=user, mode=mode,
+                   n_inputs=cls._n(n_inputs, payload), payload=payload)
+
+    @classmethod
+    def usecase(cls, task: str, dataset: str, *, min_accuracy: float = 0.0,
+                slo: Optional[float] = None,
+                latency_ms: Optional[float] = None, user: str = "public",
+                mode: str = "online", n_inputs: Optional[int] = None,
+                payload: Optional[QueryPayload] = None) -> "QuerySpec":
+        return cls(UseCaseTarget(task, dataset, min_accuracy,
+                                 _slo_seconds(slo, latency_ms)),
+                   user=user, mode=mode,
+                   n_inputs=cls._n(n_inputs, payload), payload=payload)
+
+    @staticmethod
+    def _n(n_inputs: Optional[int], payload: Optional[QueryPayload]) -> int:
+        if n_inputs is None:
+            return len(payload) if payload is not None else 1
+        return n_inputs
+
+    # -- views ----------------------------------------------------------
+    @property
+    def granularity(self) -> str:
+        return self.target.granularity
+
+    @property
+    def slo(self) -> Optional[float]:
+        return self.target.slo
+
+
+@dataclasses.dataclass
+class QueryResult:
+    """Completed-query view handed out by ``QueryHandle.result()``."""
+    ok: bool                          # finished and not failed
+    failed: bool
+    outputs: Optional[List[Any]]      # per-input token-id arrays (real
+    #                                   backend with payload), else None
+    latency: float                    # arrival -> finish, seconds
+    queue: float                      # waiting for a device slot
+    load: float                       # variant load time this query paid
+    compute: float                    # service time on the device
+    slo: Optional[float]
+    slo_met: Optional[bool]           # None when the spec carried no SLO
+    variant: str
+    worker: str
+    processed: int = 0                # offline: inputs completed
+    total: int = 0                    # offline: inputs requested
+
+
+class QueryHandle:
+    """Future for one submitted ``QuerySpec`` (online query or offline job).
+
+    ``result(timeout=...)`` pumps the cluster's event loop until the query
+    completes (or the virtual deadline passes -> ``TimeoutError``), so a
+    client never needs to guess a ``run_until`` horizon or nest callbacks.
+    ``add_done_callback(fn)`` registers ``fn(handle)``; callbacks run in
+    registration order, immediately if already done. Completion is
+    idempotent — a hedged duplicate finishing after its winner cannot
+    re-fire the handle.
+    """
+
+    def __init__(self, spec: QuerySpec, loop,
+                 query: Optional[Query] = None,
+                 job: Optional[OfflineJob] = None):
+        self.spec = spec
+        self.query = query
+        self.job = job
+        self._loop = loop
+        self._done = False
+        self._snapshot: Optional[QueryResult] = None
+        self._callbacks: List[Callable[["QueryHandle"], None]] = []
+
+    # -- completion machinery (driven by the master) --------------------
+    def _complete(self, *_ignored) -> None:
+        if self._done:
+            return
+        self._done = True
+        # snapshot now: a losing hedge copy finishing later mutates the
+        # raw Query's finish/violated fields, and result() must keep
+        # reporting the winner's latency and verdict
+        self._snapshot = self._build_result()
+        for cb in self._callbacks:
+            cb(self)
+        self._callbacks.clear()
+
+    # -- future surface --------------------------------------------------
+    @property
+    def done(self) -> bool:
+        return self._done
+
+    def add_done_callback(self,
+                          fn: Callable[["QueryHandle"], None]) -> None:
+        if self._done:
+            fn(self)
+        else:
+            self._callbacks.append(fn)
+
+    def result(self, timeout: Optional[float] = None) -> QueryResult:
+        """Block (by pumping the event loop) until done; ``timeout`` is in
+        loop time (virtual seconds on an ``EventLoop``)."""
+        loop = self._loop
+        deadline = None if timeout is None else loop.now() + timeout
+        while not self._done:
+            nxt = loop.next_event_time()
+            if nxt is None:
+                break                     # loop drained; nothing can finish
+            if deadline is not None and nxt > deadline:
+                loop.run_until(deadline)
+                break
+            loop.step()
+        if not self._done:
+            raise TimeoutError(
+                f"query not done after pumping the loop to "
+                f"t={loop.now():.3f}s (timeout={timeout})")
+        return self._snapshot
+
+    # -- completed-state views -------------------------------------------
+    def _build_result(self) -> QueryResult:
+        if self.job is not None:
+            j = self.job
+            return QueryResult(
+                ok=j.done and not j.failed, failed=j.failed,
+                outputs=j.outputs or None,
+                latency=(j.finish - j.arrival) if j.finish >= 0 else -1.0,
+                queue=0.0, load=0.0, compute=0.0,
+                slo=None, slo_met=None, variant=j.variant, worker="",
+                processed=j.processed, total=j.total_inputs)
+        q = self.query
+        queue, load, compute = self.breakdown
+        return QueryResult(
+            ok=q.finish >= 0 and not q.failed, failed=q.failed,
+            outputs=q.outputs, latency=q.latency,
+            queue=queue, load=load, compute=compute,
+            slo=q.slo, slo_met=self.slo_met,
+            variant=q.variant, worker=q.worker)
+
+    @property
+    def breakdown(self) -> Tuple[float, float, float]:
+        """(queue, load, compute) seconds; queue+load+compute == latency."""
+        q = self.query
+        if q is None or q.finish < 0 or q.start < 0:
+            return (0.0, 0.0, 0.0)
+        compute = q.finish - q.start
+        load = min(q.load_wait, q.start - q.arrival)
+        queue = max(q.start - q.arrival - load, 0.0)
+        return (queue, load, compute)
+
+    @property
+    def slo_met(self) -> Optional[bool]:
+        """SLO verdict: None when the spec carried no SLO or the query is
+        not done, else whether latency stayed within it."""
+        q = self.query
+        if q is None or q.slo is None or q.finish < 0:
+            return None
+        return not q.violated
+
+
+# ----------------------------------------------------------------------
 class INFaaS:
-    def __init__(self, master: Master):
+    """Table-1 facade over the master."""
+
+    def __init__(self, master: "Master"):
         self.master = master
 
     # ------------------------------------------------------------------
@@ -57,6 +382,12 @@ class INFaaS:
         return out
 
     # ------------------------------------------------------------------
+    def submit(self, spec: QuerySpec) -> QueryHandle:
+        """The model-less query call: one path for every granularity and
+        both modes. Returns a ``QueryHandle`` future."""
+        return self.master.submit(spec)
+
+    # -- deprecated kwargs forms (thin shims over QuerySpec) -------------
     def online_query(self, *, submitter: str = "public", n_inputs: int = 1,
                      mod_var: Optional[str] = None,
                      mod_arch: Optional[str] = None,
@@ -65,11 +396,19 @@ class INFaaS:
                      accuracy: float = 0.0,
                      latency_ms: Optional[float] = None,
                      done_cb=None) -> Query:
-        slo = latency_ms / 1e3 if latency_ms is not None else None
-        return self.master.online_query(
-            n_inputs=n_inputs, slo=slo, arch=mod_arch, variant=mod_var,
-            task=task, dataset=dataset, accuracy=accuracy, user=submitter,
-            done_cb=done_cb)
+        """Deprecated: build a ``QuerySpec`` and call ``submit``."""
+        warnings.warn("INFaaS.online_query(**kwargs) is deprecated; "
+                      "use submit(QuerySpec...)", DeprecationWarning,
+                      stacklevel=2)
+        spec = _spec_from_kwargs(
+            mode="online", variant=mod_var, arch=mod_arch, task=task,
+            dataset=dataset, accuracy=accuracy,
+            slo=latency_ms / 1e3 if latency_ms is not None else None,
+            user=submitter, n_inputs=n_inputs)
+        h = self.master.submit(spec)
+        if done_cb is not None:
+            h.add_done_callback(lambda hh: done_cb(hh.query))
+        return h.query
 
     def offline_query(self, *, submitter: str = "public", n_inputs: int,
                       mod_var: Optional[str] = None,
@@ -77,8 +416,36 @@ class INFaaS:
                       task: Optional[str] = None,
                       dataset: Optional[str] = None, accuracy: float = 0.0,
                       done_cb=None) -> OfflineJob:
-        # input/output object-store paths are validated by the real system;
-        # here n_inputs stands in for the staged input set.
-        return self.master.offline_query(
-            n_inputs=n_inputs, arch=mod_arch, variant=mod_var, task=task,
-            dataset=dataset, accuracy=accuracy, done_cb=done_cb)
+        """Deprecated: build an offline ``QuerySpec`` and call ``submit``.
+        (Input/output object-store paths are validated by the real system;
+        here ``n_inputs`` stands in for the staged input set.) The legacy
+        form always selected as the public user — preserved here;
+        spec-built offline queries honor ``user`` for access control."""
+        warnings.warn("INFaaS.offline_query(**kwargs) is deprecated; "
+                      "use submit(QuerySpec(..., mode='offline'))",
+                      DeprecationWarning, stacklevel=2)
+        del submitter                 # legacy behavior: never forwarded
+        spec = _spec_from_kwargs(
+            mode="offline", variant=mod_var, arch=mod_arch, task=task,
+            dataset=dataset, accuracy=accuracy, slo=None, user="public",
+            n_inputs=n_inputs)
+        h = self.master.submit(spec)
+        if done_cb is not None:
+            h.add_done_callback(lambda hh: done_cb(hh.job))
+        return h.job
+
+
+def _spec_from_kwargs(*, mode: str, variant: Optional[str],
+                      arch: Optional[str], task: Optional[str],
+                      dataset: Optional[str], accuracy: float,
+                      slo: Optional[float], user: str,
+                      n_inputs: int) -> QuerySpec:
+    """Granularity resolution of the legacy kwargs forms (variant wins,
+    then arch, else use-case) — shared by the facade and master shims."""
+    if variant is not None:
+        target: Target = VariantTarget(variant, slo)
+    elif arch is not None:
+        target = ArchTarget(arch, slo)
+    else:
+        target = UseCaseTarget(task or "", dataset or "", accuracy, slo)
+    return QuerySpec(target, user=user, mode=mode, n_inputs=n_inputs)

@@ -10,11 +10,14 @@ from __future__ import annotations
 import dataclasses
 import itertools
 import time
+import warnings
 from typing import Callable, Dict, List, Optional, Tuple
 
 from repro.configs.base import ArchConfig
 from repro.core import profiler as prof
 from repro.core.abstraction import ModelArchInfo, Variant
+from repro.core.api import (ArchTarget, QueryHandle, QuerySpec,
+                            UseCaseTarget, VariantTarget, _spec_from_kwargs)
 from repro.core.autoscaler import (MasterAutoscaler, MasterScaleConfig,
                                    WorkerAutoscaler)
 from repro.core.metadata import MetadataStore
@@ -142,33 +145,59 @@ class Master:
         return n
 
     # ------------------------------------------------------------------
-    # query path (paper §3.3 life cycle)
-    def online_query(self, *, n_inputs: int = 1, slo: Optional[float] = None,
-                     arch: Optional[str] = None,
-                     variant: Optional[str] = None,
-                     task: Optional[str] = None, dataset: Optional[str] = None,
-                     accuracy: float = 0.0, user: str = "public",
-                     done_cb: Optional[Callable] = None) -> Query:
-        q = Query(qid=next(self._qid), kind="online", n_inputs=n_inputs,
-                  slo=slo, arrival=self.loop.now(), arch=arch or "",
-                  variant=variant or "", task=task or "",
-                  dataset=dataset or "", min_accuracy=accuracy, user=user,
-                  done_cb=done_cb)
+    # query path (paper §3.3 life cycle): one submit() for every
+    # granularity and both modes; everything downstream replays the spec
+    def submit(self, spec: QuerySpec) -> QueryHandle:
+        if spec.mode == "offline":
+            return self._submit_offline(spec)
+        return self._submit_online(spec)
+
+    def _select(self, spec: QuerySpec, batch: int,
+                record: bool) -> Selection:
+        """Run selection at the spec's granularity. ``record`` logs the
+        decision latency (first dispatch only — redispatches and offline
+        selections were never part of the §8.6 overhead account)."""
+        t = spec.target
         t0 = time.perf_counter()
-        if variant is not None:
-            sel = self.selector.select_variant(variant, n_inputs)
+        if isinstance(t, VariantTarget):
+            sel = self.selector.select_variant(t.name, batch)
             mode = "modvar"
-        elif arch is not None:
-            sel = self.selector.select_arch(arch, n_inputs, slo)
+        elif isinstance(t, ArchTarget):
+            sel = self.selector.select_arch(t.name, batch, t.slo)
             mode = "modarch"
         else:
-            sel = self.selector.select_usecase(task, dataset, accuracy,
-                                               n_inputs, slo, user)
+            sel = self.selector.select_usecase(
+                t.task, t.dataset, t.min_accuracy, batch, t.slo, spec.user)
             mode = "usecase"
-        decision_us = (time.perf_counter() - t0) * 1e6
-        self.decision_log.append((mode, sel.needs_load, decision_us))
+        if record:
+            decision_us = (time.perf_counter() - t0) * 1e6
+            self.decision_log.append((mode, sel.needs_load, decision_us))
+        return sel
+
+    def _query_from_spec(self, spec: QuerySpec, arrival: float,
+                         hedge_of: Optional[int] = None) -> Query:
+        """Materialize a Query from a spec; the flat target fields are
+        copies for metrics attribution, the spec itself is authoritative."""
+        t = spec.target
+        return Query(
+            qid=next(self._qid), kind="online", n_inputs=spec.n_inputs,
+            slo=spec.slo, arrival=arrival,
+            arch=t.name if isinstance(t, ArchTarget) else "",
+            variant=t.name if isinstance(t, VariantTarget) else "",
+            task=t.task if isinstance(t, UseCaseTarget) else "",
+            dataset=t.dataset if isinstance(t, UseCaseTarget) else "",
+            min_accuracy=t.min_accuracy
+            if isinstance(t, UseCaseTarget) else 0.0,
+            user=spec.user, spec=spec, payload=spec.payload,
+            hedge_of=hedge_of)
+
+    def _submit_online(self, spec: QuerySpec) -> QueryHandle:
+        q = self._query_from_spec(spec, arrival=self.loop.now())
+        handle = QueryHandle(spec, self.loop, query=q)
+        q.done_cb = handle._complete
+        sel = self._select(spec, batch=spec.n_inputs, record=True)
         self._dispatch(q, sel, retries=0)
-        return q
+        return handle
 
     def _dispatch(self, q: Query, sel: Selection, retries: int) -> None:
         if sel.variant is None or sel.worker is None:
@@ -191,6 +220,7 @@ class Master:
         if sel.needs_load and self.store.instance(
                 sel.variant.name, sel.worker) is None:
             worker.load_variant(sel.variant)
+            q.load_wait = sel.variant.profile.load_latency * worker.slowdown
         orig_cb = q.done_cb
 
         def on_done(qq: Query) -> None:
@@ -207,28 +237,11 @@ class Master:
             self._arm_hedge(q, sel)
 
     def _redispatch(self, q: Query, retries: int) -> None:
-        # re-select at the query's original granularity: use-case queries
-        # carry neither arch nor user-named variant, so they re-run
-        # select_usecase. q.variant is also overwritten as a side effect
-        # of every dispatch, so it is the lowest-priority key here and
-        # only pins queries that named a variant up front (arch and task
-        # are empty for those).
-        if q.arch:
-            sel = self.selector.select_arch(q.arch, q.n_inputs, q.slo)
-        elif q.task:
-            sel = self.selector.select_usecase(
-                q.task, q.dataset, q.min_accuracy, q.n_inputs, q.slo,
-                q.user)
-        elif q.variant:
-            sel = self.selector.select_variant(q.variant, q.n_inputs)
-        else:
-            sel = None
-        if sel is None:
-            q.failed = True
-            if q.done_cb:
-                q.done_cb(q)
-            return
-        self._dispatch(q, sel, retries)
+        # replay the immutable spec at its original granularity — no
+        # re-derivation from sentinel fields (q.variant is overwritten as
+        # a side effect of every dispatch and cannot be trusted here)
+        self._dispatch(q, self._select(q.spec, batch=q.n_inputs,
+                                       record=False), retries)
 
     # -- hedged requests (straggler mitigation, DESIGN.md §6) -------------
     def _arm_hedge(self, q: Query, sel: Selection) -> None:
@@ -245,11 +258,17 @@ class Master:
             if not insts:
                 return
             backup = min(insts, key=lambda i: i.qps)
-            dup = Query(qid=next(self._qid), kind="online",
-                        n_inputs=q.n_inputs, slo=q.slo, arrival=q.arrival,
-                        arch=q.arch, hedge_of=q.qid)
+            # the duplicate is derived from the original spec, so hedges
+            # of use-case and variant-named queries keep task / dataset /
+            # min_accuracy / user / payload, and metrics attribute them
+            # to the right tenant and use case
+            dup = self._query_from_spec(q.spec, arrival=q.arrival,
+                                        hedge_of=q.qid)
 
             def first_wins(winner: Query) -> None:
+                if winner.failed or winner.finish < 0:
+                    return            # dead duplicate must not complete
+                #                       the original with bogus state
                 if q.finish >= 0:
                     return            # original already answered
                 q.finish = winner.finish
@@ -257,6 +276,8 @@ class Master:
                 q.variant = winner.variant
                 q.worker = winner.worker
                 q.violated = winner.violated
+                q.outputs = winner.outputs
+                q.load_wait = winner.load_wait
                 q.cancelled = False
                 if q.done_cb:
                     q.done_cb(q)
@@ -267,38 +288,89 @@ class Master:
         self.loop.schedule(trigger, check)
 
     # ------------------------------------------------------------------
-    # offline queries (paper §3.2: best-effort, no latency option)
+    # offline queries (paper §3.2: best-effort, no latency option) — same
+    # spec/handle machinery as online, including the scheduled-retry path
+    # when selection cannot place the job yet
+    def _submit_offline(self, spec: QuerySpec) -> QueryHandle:
+        job = OfflineJob(jid=next(self._jid), variant="",
+                         total_inputs=spec.n_inputs, spec=spec,
+                         payload=spec.payload, arrival=self.loop.now())
+        handle = QueryHandle(spec, self.loop, job=job)
+
+        def record(j: OfflineJob) -> None:
+            j.finish = self.loop.now()
+            if not j.failed:
+                self.offline_done.append(j)
+            handle._complete()
+        job.done_cb = record
+        self._dispatch_offline(job, retries=0)
+        return handle
+
+    def _dispatch_offline(self, job: OfflineJob, retries: int) -> None:
+        sel = self._select(job.spec, batch=1, record=False)
+        worker = None
+        if sel.variant is not None and sel.worker is not None:
+            worker = self.workers.get(sel.worker)
+            if worker is not None and not worker.alive:
+                worker = None
+        if worker is not None and sel.needs_load and self.store.instance(
+                sel.variant.name, sel.worker) is None:
+            if not worker.load_variant(sel.variant):
+                # selection used heartbeat-stale memory accounting and the
+                # device filled meanwhile: re-enter the retry loop rather
+                # than parking the job on a worker that will never host
+                # the variant
+                worker = None
+        if worker is None:
+            # nothing can serve it yet: scheduled retry, like online
+            if retries < self.cfg.max_retries:
+                self.loop.schedule(
+                    self.cfg.retry_delay,
+                    lambda: self._dispatch_offline(job, retries + 1))
+            else:
+                job.failed = True
+                if job.done_cb:
+                    job.done_cb(job)
+            return
+        job.variant = sel.variant.name
+        worker.submit_offline(job)
+
+    # ------------------------------------------------------------------
+    # deprecated kwargs forms (thin shims over QuerySpec)
+    def online_query(self, *, n_inputs: int = 1, slo: Optional[float] = None,
+                     arch: Optional[str] = None,
+                     variant: Optional[str] = None,
+                     task: Optional[str] = None, dataset: Optional[str] = None,
+                     accuracy: float = 0.0, user: str = "public",
+                     done_cb: Optional[Callable] = None) -> Query:
+        warnings.warn("Master.online_query(**kwargs) is deprecated; use "
+                      "submit(QuerySpec...)", DeprecationWarning,
+                      stacklevel=2)
+        spec = _spec_from_kwargs(mode="online", variant=variant, arch=arch,
+                                 task=task, dataset=dataset,
+                                 accuracy=accuracy, slo=slo, user=user,
+                                 n_inputs=n_inputs)
+        h = self.submit(spec)
+        if done_cb is not None:
+            h.add_done_callback(lambda hh: done_cb(hh.query))
+        return h.query
+
     def offline_query(self, *, n_inputs: int, arch: Optional[str] = None,
                       variant: Optional[str] = None,
                       task: Optional[str] = None,
                       dataset: Optional[str] = None, accuracy: float = 0.0,
                       done_cb: Optional[Callable] = None) -> OfflineJob:
-        if variant is not None:
-            sel = self.selector.select_variant(variant, 1)
-        elif arch is not None:
-            sel = self.selector.select_arch(arch, 1, None)
-        else:
-            sel = self.selector.select_usecase(task, dataset, accuracy, 1,
-                                               None)
-        job = OfflineJob(jid=next(self._jid), variant="",
-                         total_inputs=n_inputs)
-
-        def record(j: OfflineJob) -> None:
-            self.offline_done.append(j)
-            if done_cb:
-                done_cb(j)
-        job.done_cb = record
-        if sel.variant is None or sel.worker is None:
-            return job   # nothing can serve it yet; caller may retry
-        job.variant = sel.variant.name
-        worker = self.workers.get(sel.worker)
-        if worker is None:
-            return job
-        if sel.needs_load and self.store.instance(
-                sel.variant.name, sel.worker) is None:
-            worker.load_variant(sel.variant)
-        worker.submit_offline(job)
-        return job
+        warnings.warn("Master.offline_query(**kwargs) is deprecated; use "
+                      "submit(QuerySpec(..., mode='offline'))",
+                      DeprecationWarning, stacklevel=2)
+        spec = _spec_from_kwargs(mode="offline", variant=variant, arch=arch,
+                                 task=task, dataset=dataset,
+                                 accuracy=accuracy, slo=None, user="public",
+                                 n_inputs=n_inputs)
+        h = self.submit(spec)
+        if done_cb is not None:
+            h.add_done_callback(lambda hh: done_cb(hh.job))
+        return h.job
 
     # ------------------------------------------------------------------
     # worker-initiated placements (upgrade to hardware the worker lacks)

@@ -8,7 +8,9 @@ replication on-accelerator, per paper §6.2); the host CPU offers
 replication.
 
 The data plane behind a device is pluggable through the ``Executor``
-protocol: ``run(variant, batch)`` returns the service time of one batch.
+protocol: ``run(variant, batch, requests)`` returns the service time of
+one batch; ``requests`` carries each co-batched query's ``ExecRequest``
+(real payload prompts in, generated token ids out via ``on_outputs``).
 ``SimExecutor`` (default) answers from the variant's profiled
 t(b) = m*b + c; ``repro.serving.executor.EngineExecutor`` actually runs the
 batch through a real continuous-batching ``ServingEngine`` and returns the
@@ -22,8 +24,8 @@ from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import (Callable, Deque, Dict, List, Optional, Protocol,
-                    runtime_checkable)
+from typing import (Any, Callable, Deque, Dict, List, Optional, Protocol,
+                    Tuple, runtime_checkable)
 
 from repro.core.metadata import InstanceState, MetadataStore
 from repro.core.repository import ModelRepository
@@ -40,13 +42,23 @@ class Query:
     arrival: float
     arch: str = ""
     variant: str = ""
-    # use-case granularity (paper §3.2): persisted so a redispatch can
-    # re-run select_usecase instead of failing a query that named neither
-    # an arch nor a variant
+    # use-case granularity (paper §3.2): kept as flat fields for metrics
+    # attribution; the authoritative description is ``spec``
     task: str = ""
     dataset: str = ""
     min_accuracy: float = 0.0
     user: str = "public"
+    # the immutable api.QuerySpec this query was built from; redispatch
+    # and hedging replay it instead of re-deriving granularity from the
+    # sentinel fields above (typed Any: the control plane stays free of an
+    # api-module import cycle)
+    spec: Any = None
+    # api.QueryPayload: real token-id prompts threaded down to the
+    # executor; ``outputs`` comes back from a real engine (one token-id
+    # array per prompt, submission order)
+    payload: Any = None
+    outputs: Optional[List[Any]] = None
+    load_wait: float = 0.0          # load latency this query paid
     worker: str = ""
     start: float = -1.0
     finish: float = -1.0
@@ -67,6 +79,13 @@ class OfflineJob:
     variant: str
     total_inputs: int
     processed: int = 0
+    spec: Any = None                # api.QuerySpec (mode="offline")
+    payload: Any = None             # api.QueryPayload; chunks are sliced
+    #                                 from it as the job advances
+    outputs: List[Any] = dataclasses.field(default_factory=list)
+    arrival: float = 0.0
+    finish: float = -1.0
+    failed: bool = False            # no capacity after max_retries
     done_cb: Optional[Callable[["OfflineJob"], None]] = None
 
     @property
@@ -74,29 +93,50 @@ class OfflineJob:
         return self.processed >= self.total_inputs
 
 
+@dataclasses.dataclass
+class ExecRequest:
+    """One logical query's slice of a device batch, handed to the Executor.
+
+    ``prompts`` carries the query's real token-id prompts (empty tuple ->
+    the executor substitutes synthetic inputs, ``n_inputs`` of them).
+    ``on_outputs`` is called with the per-input generated token-id arrays
+    when a real executor finishes the batch; sim executors ignore it.
+    """
+    n_inputs: int
+    prompts: Tuple = ()
+    max_new_tokens: int = 0         # 0 -> executor default
+    on_outputs: Optional[Callable[[List[Any]], None]] = None
+
+
 @runtime_checkable
 class Executor(Protocol):
     """Data plane behind a worker device.
 
-    ``run(variant, batch)`` performs (or models) the service of one batch
-    on the variant and returns its service time in seconds. Called when a
-    job actually starts on a device slot; the worker schedules the job's
-    completion that far into the future, so simulated and real execution
-    share the whole dispatch/monitor/autoscale machinery.
+    ``run(variant, batch, requests)`` performs (or models) the service of
+    one batch on the variant and returns its service time in seconds.
+    ``requests`` (optional) carries one ``ExecRequest`` per co-batched
+    query — real payload prompts in, generated tokens out via each
+    request's ``on_outputs`` sink. Called when a job actually starts on a
+    device slot; the worker schedules the job's completion that far into
+    the future, so simulated and real execution share the whole
+    dispatch/monitor/autoscale machinery.
     """
 
-    def run(self, variant, batch: int) -> float:
+    def run(self, variant, batch: int,
+            requests: Optional[List[ExecRequest]] = None) -> float:
         ...
 
 
 class SimExecutor:
     """Profile-driven executor: service time from the variant's t(b) fit
-    (optionally overridden by a ``service_time_fn(variant, batch)``)."""
+    (optionally overridden by a ``service_time_fn(variant, batch)``).
+    Payloads are accounted but not executed — no outputs are produced."""
 
     def __init__(self, service_time_fn: Optional[Callable] = None):
         self.service_time_fn = service_time_fn
 
-    def run(self, variant, batch: int) -> float:
+    def run(self, variant, batch: int,
+            requests: Optional[List[ExecRequest]] = None) -> float:
         if self.service_time_fn is not None:
             return self.service_time_fn(variant, batch)
         return variant.profile.latency(batch)
@@ -133,15 +173,18 @@ class _Device:
 
 class _Job:
     __slots__ = ("instance", "queries", "batch", "offline_job", "duration",
-                 "start_time")
+                 "start_time", "requests")
 
-    def __init__(self, instance, queries, batch, offline_job=None):
+    def __init__(self, instance, queries, batch, offline_job=None,
+                 requests=None):
         self.instance = instance
         self.queries = queries
         self.batch = batch
         self.offline_job = offline_job
         self.duration = 0.0
         self.start_time = 0.0
+        # per-query ExecRequests: real payload prompts down, outputs back
+        self.requests: List[ExecRequest] = requests or []
 
 
 class _LocalInstance:
@@ -275,8 +318,22 @@ class Worker:
         hw = HW.HARDWARE[li.variant.hardware]
         return 1 if hw.kind == "accel" else li.replicas
 
-    def _service_time(self, li: _LocalInstance, batch: int) -> float:
-        return self.executor.run(li.variant, batch) * self.slowdown
+    def _service_time(self, job: _Job) -> float:
+        return self.executor.run(job.instance.variant, job.batch,
+                                 job.requests or None) * self.slowdown
+
+    @staticmethod
+    def _exec_request(q: Query) -> ExecRequest:
+        """The executor-facing slice of one query: real prompts when the
+        query carries a payload (outputs land back on ``q.outputs``),
+        synthetic accounting otherwise — tokens decoded from synthetic
+        stand-ins are not answers, so no sink is attached."""
+        if q.payload is not None:
+            return ExecRequest(
+                n_inputs=q.n_inputs, prompts=q.payload.prompts,
+                max_new_tokens=q.payload.max_new_tokens,
+                on_outputs=lambda outs, qq=q: setattr(qq, "outputs", outs))
+        return ExecRequest(n_inputs=q.n_inputs)
 
     def _try_dispatch(self, vname: str) -> None:
         li = self.instances.get(vname)
@@ -300,7 +357,8 @@ class Worker:
                 batch += q.n_inputs
             if not queries:
                 return
-            job = _Job(li, queries, batch)
+            job = _Job(li, queries, batch,
+                       requests=[self._exec_request(q) for q in queries])
             li.outstanding += 1
             self._submit(dev, job)
 
@@ -315,7 +373,14 @@ class Worker:
         # a real executor runs the batch here (and measures it), a sim
         # executor just evaluates the profile — either way the completion
         # is scheduled that far into the future
-        job.duration = self._service_time(job.instance, job.batch)
+        try:
+            job.duration = self._service_time(job)
+        except Exception:
+            # a bad batch (e.g. a payload exceeding the real engine's
+            # max_len) must not escape into the event loop and wedge the
+            # device slot: fail the work, keep the slot usable
+            self._fail_job(dev, job)
+            return
         dev.active += 1
         now = self.loop.now()
         job.start_time = now
@@ -324,6 +389,28 @@ class Worker:
             if q.start < 0:
                 q.start = now
         self.loop.schedule(job.duration, lambda: self._complete(dev, job))
+
+    def _fail_job(self, dev: _Device, job: _Job) -> None:
+        """Executor rejected the batch before it started: surface failure
+        (the master's retry path owns what happens next) and keep the
+        device draining."""
+        li = job.instance
+        if job.offline_job is None:
+            li.outstanding -= 1
+            for q in job.queries:
+                q.failed = True
+                if q.done_cb:
+                    q.done_cb(q)
+        else:
+            job.offline_job.failed = True
+            if job.offline_job in self.offline_jobs:
+                # drop it, or _pump_offline would retry the poisoned
+                # chunk on every monitor tick forever
+                self.offline_jobs.remove(job.offline_job)
+            if job.offline_job.done_cb:
+                job.offline_job.done_cb(job.offline_job)
+        if dev.waiting and dev.active < dev.slots:
+            self._start(dev, dev.waiting.popleft())
 
     def _complete(self, dev: _Device, job: _Job) -> None:
         if not self.alive:
@@ -387,7 +474,7 @@ class Worker:
         if not self.alive or self._offline_throttled():
             return
         for job in list(self.offline_jobs):
-            if job.done:
+            if job.done or job.failed:
                 self.offline_jobs.remove(job)
                 continue
             li = self.instances.get(job.variant)
@@ -399,7 +486,16 @@ class Worker:
                 continue
             chunk = min(job.total_inputs - job.processed,
                         li.variant.profile.max_batch)
-            j = _Job(li, [], chunk, offline_job=job)
+            reqs = []
+            if job.payload is not None:
+                # slice this chunk's real prompts from the staged payload
+                # (one chunk in flight per device: dev.idle gate above)
+                sl = job.payload.prompts[job.processed:job.processed + chunk]
+                reqs = [ExecRequest(
+                    n_inputs=chunk, prompts=sl,
+                    max_new_tokens=job.payload.max_new_tokens,
+                    on_outputs=lambda outs, jj=job: jj.outputs.extend(outs))]
+            j = _Job(li, [], chunk, offline_job=job, requests=reqs)
             self._submit(dev, j)
 
     # ------------------------------------------------------------------

@@ -25,6 +25,7 @@ import argparse
 from typing import Optional, Sequence
 
 from repro.configs.registry import ARCHS
+from repro.core.api import QuerySpec
 from repro.sim.cluster import make_cluster
 from repro.sim.workload import poisson_arrivals
 from benchmarks.common import steady_metrics  # noqa: E402
@@ -106,7 +107,7 @@ def main(argv: Optional[Sequence[str]] = None) -> None:
 
     def fire(t):
         a = arch_names[rng.integers(len(arch_names))]
-        c.api.online_query(mod_arch=a, latency_ms=args.slo_ms)
+        c.api.submit(QuerySpec.arch(a, latency_ms=args.slo_ms))
 
     poisson_arrivals(c.loop, lambda t: args.rate, fire,
                      t_end=args.duration, seed=0)

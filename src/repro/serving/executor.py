@@ -6,12 +6,21 @@ control plane — per-query variant selection, adaptive batching, the
 monitoring daemon, and two-level autoscaling — drives *live* JAX engines
 instead of the profile-driven simulation:
 
-* ``run(variant, batch)`` builds (lazily) a reduced-config engine for the
-  variant, pushes a batch of synthetic requests through the open-loop
+* ``run(variant, batch, requests)`` builds (lazily) a reduced-config
+  engine for the variant, pushes the batch through the open-loop
   ``submit()``/``step()``/``drain_completions()`` core, and returns the
   measured wall-clock service time. That measured time becomes the job's
   duration on the worker's (virtual) clock, so queueing, utilization, and
   autoscaling decisions all reflect real execution speed.
+
+* each ``ExecRequest`` in ``requests`` is one co-batched query: when it
+  carries real payload prompts, every prompt becomes one
+  ``serving.engine.Request`` and the generated token ids are handed back
+  through the request's ``on_outputs`` sink (one array per prompt, in
+  submission order) — a payload-carrying ``QuerySpec`` is served on its
+  *actual* inputs, not synthetic stand-ins. Requests without prompts fall
+  back to the synthetic shape (``prompt_len``/``max_new`` below), which
+  keeps compile caches to one prefill bucket for pure-accounting load.
 
 * every measurement is recorded per batch size, and once two distinct
   batch sizes have been observed the variant's ``VariantProfile`` is
@@ -32,13 +41,14 @@ import dataclasses
 import itertools
 import time
 from collections import deque
-from typing import Any, Deque, Dict, Optional, Tuple
+from typing import Any, Deque, Dict, List, Optional, Tuple
 
 import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.core import profiler as prof
 from repro.core.abstraction import Variant
+from repro.core.worker import ExecRequest
 from repro.serving.engine import Request, ServingEngine
 
 
@@ -106,27 +116,67 @@ class EngineExecutor:
         return eng
 
     # ------------------------------------------------------------------
-    def run(self, variant: Variant, batch: int) -> float:
-        """Serve one batch of ``batch`` synthetic requests for real; return
-        the measured service time and fold it into the variant's profile."""
+    def _synthetic_prompt(self, vocab: int) -> np.ndarray:
+        return (np.arange(self.cfg.prompt_len, dtype=np.int64)
+                % vocab).astype(np.int32)
+
+    def run(self, variant: Variant, batch: int,
+            requests: Optional[List[ExecRequest]] = None) -> float:
+        """Serve one batch for real — each ExecRequest's payload prompts
+        (or synthetic stand-ins) become engine Requests; return the
+        measured service time, hand generated tokens back through each
+        request's ``on_outputs`` sink, and fold the measurement into the
+        variant's profile."""
         eng = self._engine(variant)
         vocab = self.arch_cfgs[variant.arch].vocab
-        n = max(int(batch), 1)
+        if not requests:
+            requests = [ExecRequest(n_inputs=max(int(batch), 1))]
+        # compile any new prompt buckets outside the measured window, so
+        # a first-seen payload length doesn't bill XLA compile time as
+        # service time
+        real_lens = [len(p) for er in requests for p in er.prompts]
+        if real_lens:
+            eng.warmup(prompt_lens=real_lens)
+        groups: List[Tuple[ExecRequest, List[Request]]] = []
         t0 = time.perf_counter()
-        for _ in range(n):
-            r = Request(rid=next(self._rid),
-                        prompt=(np.arange(self.cfg.prompt_len,
-                                          dtype=np.int64) % vocab
-                                ).astype(np.int32),
-                        max_new_tokens=self.cfg.max_new, arrival=t0)
-            eng.submit(r)
+        for er in requests:
+            ers: List[Request] = []
+            if er.prompts:
+                for p in er.prompts:
+                    ers.append(Request(
+                        rid=next(self._rid),
+                        prompt=np.asarray(p, np.int32),
+                        max_new_tokens=max(er.max_new_tokens, 1),
+                        arrival=t0))
+            else:
+                for _ in range(max(er.n_inputs, 1)):
+                    ers.append(Request(
+                        rid=next(self._rid),
+                        prompt=self._synthetic_prompt(vocab),
+                        max_new_tokens=self.cfg.max_new, arrival=t0))
+            for r in ers:
+                eng.submit(r)
+            groups.append((er, ers))
         while eng.busy:
             eng.step()
         eng.drain_completions()
         dt = time.perf_counter() - t0
-        obs = self.observations.setdefault(variant.name, {})
-        obs.setdefault(n, deque(maxlen=self.cfg.obs_window)).append(dt)
-        if prof.refit_profile(variant.profile, obs,
-                              min_points=self.cfg.refit_min_points):
-            self.refits[variant.name] = self.refits.get(variant.name, 0) + 1
+        for er, ers in groups:
+            if er.on_outputs is not None:
+                er.on_outputs([np.asarray(r.tokens, np.int32)
+                               for r in ers])
+        # only synthetic runs calibrate t(b): they share one fixed
+        # (prompt_len, max_new) shape, so duration varies with batch count
+        # alone. Payload runs have arbitrary prompt/decode shapes and
+        # would corrupt the shared m/c fit that selection and autoscaling
+        # plan with (same hazard JaxExecutor.measured keys by prompt_len
+        # to avoid).
+        if not any(er.prompts for er in requests):
+            n = max(sum(len(ers) for _, ers in groups), 1)
+            obs = self.observations.setdefault(variant.name, {})
+            obs.setdefault(n, deque(maxlen=self.cfg.obs_window)).append(dt)
+            if prof.refit_profile(variant.profile, obs,
+                                  min_points=self.cfg.refit_min_points):
+                self.refits[variant.name] = \
+                    self.refits.get(variant.name, 0) + 1
         return dt

@@ -53,6 +53,21 @@ class EventLoop(Clock):
             self.schedule(period, tick)
         self.schedule(period + jitter, tick)
 
+    def next_event_time(self) -> Optional[float]:
+        """Time of the earliest scheduled event, or None when drained
+        (lets callers — e.g. ``QueryHandle.result`` — pump event-by-event
+        without overshooting a deadline)."""
+        return self._heap[0][0] if self._heap else None
+
+    def step(self) -> bool:
+        """Fire exactly the next scheduled event; False when drained."""
+        if not self._heap:
+            return False
+        t, _, fn = heapq.heappop(self._heap)
+        self._t = t
+        fn()
+        return True
+
     def run_until(self, t_end: float) -> None:
         while self._heap and self._heap[0][0] <= t_end:
             t, _, fn = heapq.heappop(self._heap)

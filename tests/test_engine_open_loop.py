@@ -18,6 +18,10 @@ import jax.numpy as jnp
 
 from repro.configs.registry import ARCHS
 from repro.models import build_model
+
+# every test here builds and decodes real JAX models (fast CI deselects
+# slow; the full tier-1 run still covers them)
+pytestmark = pytest.mark.slow
 from repro.serving.engine import Request, ServingEngine
 
 

@@ -1,18 +1,26 @@
-"""The Executor seam: control plane over real engines (ISSUE 2 tentpole).
+"""The Executor seam: control plane over real engines (ISSUE 2 tentpole),
+and the payload path (ISSUE 3): a QuerySpec carrying real prompts served
+through master -> worker -> EngineExecutor -> ServingEngine, generated
+tokens returned via QueryHandle.result().
 
 ``make_cluster(backend="real")`` serves a mixed stream through
 master -> variant selection -> ``EngineExecutor`` (real continuous-batching
 engines on reduced configs), and measured service times re-fit variant
 profiles in place — the closed loop between data plane and control plane.
 """
+import numpy as np
 import pytest
 
 from repro.configs.registry import ARCHS
+from repro.core.api import QueryPayload, QuerySpec
 from repro.core.master import MasterConfig
 from repro.core.worker import Executor, SimExecutor
 from repro.sim.cluster import make_cluster
 
 LLAMA = ARCHS["llama3.2-1b"]
+
+# tests that build real JAX models are excluded from the fast CI job
+slow = pytest.mark.slow
 
 
 def _done(q):
@@ -28,6 +36,7 @@ def test_sim_executor_is_the_default_and_satisfies_protocol():
     assert w.executor.run(v, 4) == pytest.approx(v.profile.latency(4))
 
 
+@slow
 def test_real_backend_serves_and_calibrates_profiles():
     """End-to-end acceptance: a mixed stream runs through selection into
     real engines, and at least one variant's m/c is re-fit from measured
@@ -70,6 +79,7 @@ def test_real_backend_serves_and_calibrates_profiles():
             v.profile.max_batch / v.profile.latency(v.profile.max_batch))
 
 
+@slow
 def test_real_backend_queries_see_measured_latency():
     """Virtual-clock query latency reflects real measured service time,
     not the analytic roofline guess."""
@@ -125,6 +135,7 @@ def test_variant_objects_stay_hashable():
     assert vs[0] in {vs[0]}
 
 
+@slow
 def test_jax_executor_measured_keyed_by_prompt_len():
     """Regression (ISSUE 2 satellite): mixed-length calibration runs must
     not overwrite each other."""
@@ -136,3 +147,164 @@ def test_jax_executor_measured_keyed_by_prompt_len():
     keys = set(ex.measured)
     assert keys == {(LLAMA.name, 2, 4), (LLAMA.name, 2, 8)}
     assert all(t > 0 for t in ex.measured.values())
+
+
+# ----------------------------------------------------------------------
+# ISSUE 3 acceptance: a real multi-prompt payload flows client -> master ->
+# worker -> EngineExecutor -> ServingEngine and the generated token ids
+# come back through QueryHandle.result(), bit-identical to driving the
+# engine directly with the same prompts.
+PROMPTS = ((3, 1, 4, 1, 5, 9), (2, 7, 1, 8), (1, 6, 1, 8, 0, 3, 3, 9))
+MAX_NEW = 4
+
+
+@slow
+def test_real_payload_outputs_bit_identical_to_direct_engine():
+    cfg = MasterConfig(worker_autoscale=False)
+    c = make_cluster(n_accel=1, archs=[LLAMA], autoscale=False, cfg=cfg,
+                     backend="real")
+    spec = QuerySpec.usecase(
+        "text-generation", "openwebtext", min_accuracy=0.5,
+        latency_ms=600_000,
+        payload=QueryPayload.of(PROMPTS, max_new_tokens=MAX_NEW))
+    h = c.api.submit(spec)
+    res = h.result(timeout=600.0)
+    assert res.ok, (res.failed, res.variant)
+    assert res.outputs is not None and len(res.outputs) == len(PROMPTS)
+    for out in res.outputs:
+        assert out.dtype == np.int32 and len(out) == MAX_NEW
+
+    # drive a FRESH engine (same shared model/params, same geometry)
+    # directly with the same prompts: outputs must match token for token
+    w = next(iter(c.master.workers.values()))
+    ex = w.executor
+    variant = c.store.registry.variants[res.variant]
+    exec_eng = ex.engines[variant.name]
+    model, params = ex._model(variant.arch)
+    from repro.serving.engine import Request, ServingEngine
+    eng = ServingEngine(model, params, max_batch=exec_eng.max_batch,
+                        max_len=exec_eng.max_len,
+                        decode_block=exec_eng.decode_block,
+                        min_bucket=exec_eng.min_bucket)
+    reqs = [Request(rid=i, prompt=np.asarray(p, np.int32),
+                    max_new_tokens=MAX_NEW)
+            for i, p in enumerate(PROMPTS)]
+    eng.serve(reqs)
+    for r, out in zip(reqs, res.outputs):
+        np.testing.assert_array_equal(r.tokens, out)
+
+
+@slow
+def test_real_offline_payload_produces_outputs():
+    """Offline payloads are sliced chunk by chunk into the real engine and
+    their outputs accumulate on the job in input order."""
+    cfg = MasterConfig(worker_autoscale=False)
+    c = make_cluster(n_accel=1, archs=[LLAMA], autoscale=False, cfg=cfg,
+                     backend="real")
+    prompts = tuple(tuple(int(x) for x in np.arange(2 + (i % 3)) + i)
+                    for i in range(6))
+    h = c.api.submit(QuerySpec.arch(
+        LLAMA.name, mode="offline",
+        payload=QueryPayload.of(prompts, max_new_tokens=2)))
+    res = h.result(timeout=600.0)
+    assert res.ok and res.processed >= len(prompts)
+    assert len(h.job.outputs) == len(prompts)
+    for out in h.job.outputs:
+        assert len(out) == 2
+
+
+def test_sim_backend_payload_is_accounted_not_executed():
+    """On the sim backend a payload shapes n_inputs/batching but produces
+    no outputs — the simulator has no tokens to return."""
+    c = make_cluster(n_accel=1, archs=[LLAMA], autoscale=False)
+    h = c.api.submit(QuerySpec.arch(
+        LLAMA.name, latency_ms=600_000,
+        payload=QueryPayload.of(PROMPTS, max_new_tokens=MAX_NEW)))
+    res = h.result(timeout=120.0)
+    assert res.ok
+    assert h.query.n_inputs == len(PROMPTS)
+    assert res.outputs is None
+
+
+@slow
+def test_oversized_payload_fails_query_without_wedging_device():
+    """A payload exceeding the real engine's max_len must fail the query
+    (not leak a ValueError into the event loop) and leave the device
+    usable for subsequent queries."""
+    cfg = MasterConfig(worker_autoscale=False, max_retries=1,
+                       retry_delay=0.1)
+    c = make_cluster(n_accel=1, archs=[LLAMA], autoscale=False, cfg=cfg,
+                     backend="real")
+    bad = c.api.submit(QuerySpec.arch(
+        LLAMA.name, latency_ms=600_000,
+        payload=QueryPayload.of([list(range(40))], max_new_tokens=4)))
+    res = bad.result(timeout=300.0)
+    assert res.failed and not res.ok
+    # the device slot was not leaked: a normal query still completes
+    ok = c.api.submit(QuerySpec.arch(LLAMA.name, latency_ms=600_000))
+    assert ok.result(timeout=300.0).ok
+
+
+@slow
+def test_real_backend_without_payload_returns_no_outputs():
+    """Synthetic stand-in prompts are accounting, not answers: a
+    payload-less query on the real backend must not surface their
+    decoded tokens as outputs."""
+    cfg = MasterConfig(worker_autoscale=False)
+    c = make_cluster(n_accel=1, archs=[LLAMA], autoscale=False, cfg=cfg,
+                     backend="real")
+    h = c.api.submit(QuerySpec.arch(LLAMA.name, latency_ms=600_000))
+    res = h.result(timeout=300.0)
+    assert res.ok and res.outputs is None
+
+
+@slow
+def test_oversized_offline_payload_fails_once_not_forever():
+    """A poisoned offline chunk must fail the job and leave the worker's
+    offline queue — not be retried on every monitor tick."""
+    cfg = MasterConfig(worker_autoscale=False)
+    c = make_cluster(n_accel=1, archs=[LLAMA], autoscale=False, cfg=cfg,
+                     backend="real")
+    h = c.api.submit(QuerySpec.arch(
+        LLAMA.name, mode="offline",
+        payload=QueryPayload.of([list(range(40))], max_new_tokens=4)))
+    res = h.result(timeout=300.0)
+    assert res.failed and h.job.failed
+    w = next(iter(c.master.workers.values()))
+    assert h.job not in w.offline_jobs
+    # and the cluster still serves normal traffic afterwards
+    ok = c.api.submit(QuerySpec.arch(LLAMA.name, latency_ms=600_000))
+    assert ok.result(timeout=300.0).ok
+
+
+def test_payload_runs_do_not_refit_profiles():
+    """Payload measurements have arbitrary prompt/decode shapes and must
+    stay out of the synthetic t(b) calibration."""
+    from repro.core import profiler as prof
+    from repro.core.worker import ExecRequest
+    from repro.serving.executor import EngineExecutor, EngineExecutorConfig
+
+    class _NoRunEngine:
+        busy = False
+
+        def warmup(self, prompt_lens=()):
+            pass
+
+        def submit(self, r):
+            r.tokens = np.zeros(1, np.int32)
+
+        def step(self):
+            return 0
+
+        def drain_completions(self):
+            return []
+
+    ex = EngineExecutor({LLAMA.name: LLAMA.reduced()},
+                        EngineExecutorConfig())
+    v = next(iter(prof.generate_variants(LLAMA)))
+    ex.engines[v.name] = _NoRunEngine()
+    ex.run(v, 2, [ExecRequest(n_inputs=2, prompts=((1, 2), (3,)),
+                              max_new_tokens=1)])
+    assert v.name not in ex.observations          # payload run: excluded
+    ex.run(v, 2, [ExecRequest(n_inputs=2)])
+    assert list(ex.observations[v.name]) == [2]   # synthetic run: recorded

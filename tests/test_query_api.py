@@ -1,0 +1,386 @@
+"""The QuerySpec/QueryHandle surface (ISSUE 3 tentpole).
+
+Covers: spec validation (tagged target, mode, payload/n_inputs
+consistency), handle semantics (result() pumps the event loop, callback
+ordering, per-stage breakdown, SLO verdict), shim equivalence (old kwargs
+forms == spec submissions for all three granularities), the spec-derived
+hedge duplicate, and the offline scheduled-retry path.
+"""
+import dataclasses
+
+import pytest
+
+from repro.configs.registry import ARCHS
+from repro.core.api import (ArchTarget, QueryPayload, QuerySpec,
+                            UseCaseTarget, VariantTarget)
+from repro.core.master import MasterConfig
+from repro.sim.cluster import make_cluster
+
+LLAMA = ARCHS["llama3.2-1b"]
+
+
+def _done(q):
+    return q.finish >= 0 and not q.failed
+
+
+# ----------------------------------------------------------------------
+# QuerySpec validation
+def test_spec_constructors_tag_exactly_one_target():
+    assert QuerySpec.variant("v").granularity == "variant"
+    assert QuerySpec.arch("a", latency_ms=100).granularity == "arch"
+    s = QuerySpec.usecase("t", "d", min_accuracy=0.5, latency_ms=100)
+    assert s.granularity == "usecase"
+    assert s.slo == pytest.approx(0.1)
+    assert isinstance(s.target, UseCaseTarget)
+
+
+def test_spec_rejects_untyped_target():
+    with pytest.raises(TypeError):
+        QuerySpec(target="llama3.2-1b")          # a bare string is ambiguous
+    with pytest.raises(TypeError):
+        QuerySpec(target=None)
+
+
+def test_spec_rejects_bad_mode_and_offline_slo():
+    with pytest.raises(ValueError):
+        QuerySpec(ArchTarget("a"), mode="batch")
+    with pytest.raises(ValueError):
+        QuerySpec.arch("a", latency_ms=100, mode="offline")
+    # offline without an SLO is fine (paper: no offline latency option)
+    QuerySpec.arch("a", mode="offline", n_inputs=10)
+
+
+def test_spec_slo_units_are_exclusive():
+    with pytest.raises(ValueError):
+        QuerySpec.arch("a", slo=0.1, latency_ms=100)
+    assert QuerySpec.arch("a", slo=0.1).slo == QuerySpec.arch(
+        "a", latency_ms=100).slo
+
+
+def test_payload_n_inputs_consistency():
+    p = QueryPayload.of([[1, 2, 3], [4, 5]], max_new_tokens=2)
+    assert len(p) == 2
+    s = QuerySpec.arch("a", payload=p)           # n_inputs derived
+    assert s.n_inputs == 2
+    with pytest.raises(ValueError):
+        QuerySpec.arch("a", payload=p, n_inputs=3)
+    with pytest.raises(ValueError):
+        QueryPayload.of([])
+    with pytest.raises(ValueError):
+        QueryPayload.of([[]])
+    with pytest.raises(ValueError):
+        QueryPayload.of([[1]], max_new_tokens=0)
+    with pytest.raises(ValueError):
+        QuerySpec.arch("a", n_inputs=0)
+
+
+def test_spec_is_immutable_and_hashable():
+    s = QuerySpec.usecase("t", "d", payload=QueryPayload.of([[1, 2]]))
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        s.mode = "offline"
+    assert hash(s) == hash(QuerySpec.usecase(
+        "t", "d", payload=QueryPayload.of([[1, 2]])))
+
+
+# ----------------------------------------------------------------------
+# QueryHandle semantics
+def test_result_pumps_the_event_loop():
+    c = make_cluster(n_accel=1, archs=[LLAMA], autoscale=False)
+    h = c.api.submit(QuerySpec.arch(LLAMA.name, latency_ms=5000))
+    assert not h.done
+    res = h.result(timeout=60.0)                 # no run_until by the test
+    assert h.done and res.ok and not res.failed
+    assert c.loop.now() > 0.0                    # the loop really advanced
+    assert res.latency == pytest.approx(h.query.latency)
+    # breakdown partitions the latency exactly
+    assert res.queue + res.load + res.compute == pytest.approx(res.latency)
+    assert res.load > 0.0                        # cold query paid the load
+    assert res.compute > 0.0
+    assert res.slo_met is True
+
+
+def test_result_timeout_raises_and_preserves_deadline():
+    c = make_cluster(n_accel=0, n_cpu=0, archs=[LLAMA], autoscale=False)
+    h = c.api.submit(QuerySpec.arch(LLAMA.name, latency_ms=5000))
+    with pytest.raises(TimeoutError):
+        h.result(timeout=0.3)                    # retries outlive this
+    assert c.loop.now() <= 0.3 + 1e-9            # did not overshoot
+
+
+def test_slo_verdict_violated():
+    c = make_cluster(n_accel=1, archs=[LLAMA], autoscale=False)
+    # impossible SLO: even the fastest variant's load alone exceeds it
+    h = c.api.submit(QuerySpec.arch(LLAMA.name, latency_ms=0.001))
+    res = h.result(timeout=120.0)
+    assert res.ok and res.slo_met is False
+    # no-SLO query has no verdict
+    h2 = c.api.submit(QuerySpec.variant(res.variant))
+    assert h2.result(timeout=60.0).slo_met is None
+
+
+def test_done_callbacks_fire_in_order_and_immediately_after():
+    c = make_cluster(n_accel=1, archs=[LLAMA], autoscale=False)
+    h = c.api.submit(QuerySpec.arch(LLAMA.name, latency_ms=5000))
+    order = []
+    h.add_done_callback(lambda hh: order.append("first"))
+    h.add_done_callback(lambda hh: order.append("second"))
+    h.result(timeout=60.0)
+    assert order == ["first", "second"]
+    h.add_done_callback(lambda hh: order.append("late"))
+    assert order == ["first", "second", "late"]  # already done -> immediate
+
+
+def test_failed_query_resolves_handle():
+    cfg = MasterConfig(max_retries=1, retry_delay=0.05)
+    c = make_cluster(n_accel=0, n_cpu=0, archs=[LLAMA], autoscale=False,
+                     cfg=cfg)
+    h = c.api.submit(QuerySpec.arch(LLAMA.name, latency_ms=5000))
+    res = h.result(timeout=30.0)
+    assert res.failed and not res.ok
+
+
+# ----------------------------------------------------------------------
+# shim equivalence: old kwargs forms == spec submissions
+def _drive(c, use_spec: bool):
+    vname = next(v.name for v in c.store.registry.variants.values()
+                 if v.hardware == "tpu-v5e-1")
+    if use_spec:
+        qs = [
+            c.api.submit(QuerySpec.arch(LLAMA.name, latency_ms=5000)).query,
+            c.api.submit(QuerySpec.usecase(
+                "text-generation", "openwebtext", min_accuracy=0.5,
+                latency_ms=5000)).query,
+            c.api.submit(QuerySpec.variant(vname, latency_ms=5000)).query,
+        ]
+    else:
+        qs = [
+            c.api.online_query(mod_arch=LLAMA.name, latency_ms=5000),
+            c.api.online_query(task="text-generation",
+                               dataset="openwebtext", accuracy=0.5,
+                               latency_ms=5000),
+            c.api.online_query(mod_var=vname, latency_ms=5000),
+        ]
+    c.run_until(120.0)
+    return qs
+
+
+def test_shims_match_specs_for_all_granularities():
+    results = {}
+    for use_spec in (False, True):
+        c = make_cluster(n_accel=1, archs=[LLAMA], autoscale=False)
+        qs = _drive(c, use_spec)
+        assert all(_done(q) for q in qs)
+        results[use_spec] = (
+            [q.variant for q in qs],
+            [q.latency for q in qs],
+            [m for m, _, _ in c.master.decision_log],
+        )
+    # identical selections, latencies, and decision modes
+    assert results[False][0] == results[True][0]
+    assert results[False][1] == pytest.approx(results[True][1])
+    assert results[False][2] == results[True][2] \
+        == ["modarch", "usecase", "modvar"]
+
+
+def test_shim_offline_matches_spec_offline():
+    done_counts = {}
+    for use_spec in (False, True):
+        c = make_cluster(n_accel=1, archs=[LLAMA], autoscale=False)
+        if use_spec:
+            job = c.api.submit(QuerySpec.arch(LLAMA.name, mode="offline",
+                                              n_inputs=64)).job
+        else:
+            job = c.api.offline_query(mod_arch=LLAMA.name, n_inputs=64)
+        c.run_until(120.0)
+        done_counts[use_spec] = job.processed
+        assert job.processed > 0
+    assert done_counts[False] == done_counts[True]
+
+
+def test_shim_done_cb_receives_query_and_job():
+    c = make_cluster(n_accel=1, archs=[LLAMA], autoscale=False)
+    seen = []
+    q = c.api.online_query(mod_arch=LLAMA.name, latency_ms=5000,
+                           done_cb=lambda qq: seen.append(qq))
+    j = c.api.offline_query(mod_arch=LLAMA.name, n_inputs=8,
+                            done_cb=lambda jj: seen.append(jj))
+    c.run_until(120.0)
+    assert q in seen and j in seen
+
+
+# ----------------------------------------------------------------------
+# hedging: the duplicate is derived from the original spec (satellite)
+def test_hedge_duplicate_preserves_spec_fields():
+    cfg = MasterConfig(hedge_enabled=True, hedge_factor=2.0)
+    c = make_cluster(n_accel=1, archs=[LLAMA], autoscale=False, cfg=cfg)
+    c.master.add_worker("accel", name="straggler", slowdown=25.0)
+    v = [x for x in c.store.registry.variants.values()
+         if x.hardware == "tpu-v5e-1" and x.batch_opt == 8
+         and "bf16" in x.framework][0]
+    for w in c.master.workers.values():
+        w.load_variant(v)
+    # stay inside the T_accel scale-down hysteresis so both instances are
+    # still resident when the hedge looks for a backup
+    c.run_until(10.0)
+    # a use-case query from a named tenant, routed to the straggler
+    spec = QuerySpec.usecase("text-generation", "openwebtext",
+                             min_accuracy=0.5, slo=30.0, user="tenantX")
+    q = c.master._query_from_spec(spec, arrival=c.loop.now())
+    straggler = c.master.workers["straggler"]
+    sel = type("S", (), {"variant": v, "worker": "straggler",
+                         "needs_load": False})()
+    straggler.enqueue(q, v.name)
+    c.master._arm_hedge(q, sel)
+    c.run_until(300.0)
+    assert _done(q)
+    dups = [m for m in c.master.metrics if m.hedge_of == q.qid]
+    assert dups, "hedge never fired"
+    d = dups[0]
+    # pre-fix, the duplicate dropped everything but arch/slo
+    assert d.task == "text-generation" and d.dataset == "openwebtext"
+    assert d.min_accuracy == pytest.approx(0.5)
+    assert d.user == "tenantX"
+    assert d.spec is q.spec
+    assert d.n_inputs == q.n_inputs and d.slo == q.slo
+    # the duplicate actually served on the selected variant
+    assert _done(d) and d.variant == v.name
+
+
+def test_hedged_usecase_query_via_submit_path():
+    """End-to-end: hedging armed by the normal submit path on a use-case
+    spec keeps the duplicate faithful."""
+    cfg = MasterConfig(hedge_enabled=True, hedge_factor=2.0)
+    c = make_cluster(n_accel=2, archs=[LLAMA], autoscale=False, cfg=cfg)
+    v = [x for x in c.store.registry.variants.values()
+         if x.hardware == "tpu-v5e-1" and x.batch_opt == 8
+         and "bf16" in x.framework][0]
+    for w in c.master.workers.values():
+        w.load_variant(v)
+    c.run_until(10.0)
+    h = c.api.submit(QuerySpec.usecase(
+        "text-generation", "openwebtext", min_accuracy=0.5, slo=30.0,
+        user="tenantY"))
+    c.run_until(300.0)
+    assert h.done
+    for d in (m for m in c.master.metrics if m.hedge_of is not None):
+        assert d.task and d.user != "public"
+
+
+# ----------------------------------------------------------------------
+# offline scheduled-retry path (satellite): no more inert jobs
+def test_offline_query_retries_until_capacity_appears():
+    c = make_cluster(n_accel=0, n_cpu=0, archs=[LLAMA], autoscale=False)
+    h = c.api.submit(QuerySpec.arch(LLAMA.name, mode="offline",
+                                    n_inputs=32))
+    job = h.job
+    # capacity appears only after the job has started retrying
+    c.loop.schedule(0.6, lambda: c.master.add_worker("accel"))
+    res = h.result(timeout=600.0)
+    assert res.ok and not job.failed
+    assert job.processed >= job.total_inputs
+    assert job.variant
+
+
+def test_offline_query_shim_retries_too():
+    """Regression: the kwargs shim used to return an inert OfflineJob when
+    nothing could serve it yet."""
+    c = make_cluster(n_accel=0, n_cpu=0, archs=[LLAMA], autoscale=False)
+    job = c.api.offline_query(mod_arch=LLAMA.name, n_inputs=16)
+    c.loop.schedule(0.6, lambda: c.master.add_worker("accel"))
+    c.run_until(600.0)
+    assert job.done and job.processed >= 16
+
+
+def test_offline_query_fails_after_max_retries():
+    cfg = MasterConfig(max_retries=2, retry_delay=0.05)
+    c = make_cluster(n_accel=0, n_cpu=0, archs=[LLAMA], autoscale=False,
+                     cfg=cfg)
+    h = c.api.submit(QuerySpec.arch(LLAMA.name, mode="offline",
+                                    n_inputs=8))
+    res = h.result(timeout=60.0)
+    assert res.failed and h.job.failed
+    assert h.job not in c.master.offline_done
+
+
+# ----------------------------------------------------------------------
+# spec replay on redispatch (tagged target, not sentinel fields)
+def test_usecase_spec_redispatch_reselects():
+    c = make_cluster(n_accel=0, n_cpu=0, archs=[LLAMA], autoscale=False)
+    h = c.api.submit(QuerySpec.usecase(
+        "text-generation", "openwebtext", min_accuracy=0.5,
+        latency_ms=600_000))
+    c.loop.schedule(0.6, lambda: c.master.add_worker("accel"))
+    res = h.result(timeout=600.0)
+    assert res.ok and res.variant
+    assert isinstance(h.spec.target, UseCaseTarget)
+
+
+def test_variant_spec_redispatch_pins_variant():
+    c = make_cluster(n_accel=0, n_cpu=0, archs=[LLAMA], autoscale=False)
+    vname = next(v.name for v in c.store.registry.variants.values()
+                 if v.hardware == "tpu-v5e-1")
+    h = c.api.submit(QuerySpec.variant(vname, latency_ms=600_000))
+    c.loop.schedule(0.6, lambda: c.master.add_worker("accel"))
+    res = h.result(timeout=600.0)
+    assert res.ok and res.variant == vname
+    assert isinstance(h.spec.target, VariantTarget)
+
+
+def test_result_is_snapshotted_at_completion():
+    """A losing hedge copy finishing later mutates the raw Query; the
+    handle must keep reporting the values it completed with."""
+    c = make_cluster(n_accel=1, archs=[LLAMA], autoscale=False)
+    h = c.api.submit(QuerySpec.arch(LLAMA.name, latency_ms=5000))
+    res = h.result(timeout=60.0)
+    finish0, lat0 = h.query.finish, res.latency
+    h.query.finish = finish0 + 100.0     # straggler overwrites the Query
+    h.query.violated = True
+    again = h.result(timeout=1.0)
+    assert again.latency == pytest.approx(lat0)
+    assert again.slo_met is True
+
+
+def test_failed_hedge_duplicate_does_not_complete_original():
+    """A hedge duplicate that dies on enqueue (instance gone between the
+    store lookup and the worker) must not resolve the original's handle
+    with bogus negative-latency state."""
+    cfg = MasterConfig(hedge_enabled=True, hedge_factor=2.0)
+    c = make_cluster(n_accel=2, archs=[LLAMA], autoscale=False, cfg=cfg)
+    v = [x for x in c.store.registry.variants.values()
+         if x.hardware == "tpu-v5e-1" and x.batch_opt == 8
+         and "bf16" in x.framework][0]
+    workers = list(c.master.workers.values())
+    for w in workers:
+        w.load_variant(v)
+    c.run_until(10.0)
+    spec = QuerySpec.usecase("text-generation", "openwebtext",
+                             min_accuracy=0.5, slo=30.0)
+    q = c.master._query_from_spec(spec, arrival=c.loop.now())
+    h_done = []
+    q.done_cb = lambda qq: h_done.append(qq.finish)
+    sel = type("S", (), {"variant": v, "worker": workers[0].name,
+                         "needs_load": False})()
+    workers[0].enqueue(q, v.name)
+    c.master._arm_hedge(q, sel)
+    # the backup's local instance vanishes while the store still lists it
+    # running: the duplicate's enqueue will fail immediately
+    workers[1].instances.pop(v.name)
+    c.run_until(120.0)
+    assert _done(q)
+    assert q.finish >= 0 and q.latency > 0       # not the dup's -1 finish
+    assert h_done and h_done[0] >= 0
+
+
+def test_offline_load_failure_reenters_retry_loop():
+    """If the chosen worker cannot load the variant (stale memory
+    accounting), the job must keep retrying — not park forever on a
+    worker that will never host it."""
+    cfg = MasterConfig(max_retries=3, retry_delay=0.1)
+    c = make_cluster(n_accel=1, archs=[LLAMA], autoscale=False, cfg=cfg)
+    w = next(iter(c.master.workers.values()))
+    w.load_variant = lambda *a, **k: False       # device "full" forever
+    h = c.api.submit(QuerySpec.arch(LLAMA.name, mode="offline",
+                                    n_inputs=8))
+    res = h.result(timeout=60.0)                 # resolves: fails cleanly
+    assert res.failed and h.job.failed
+    assert h.job not in w.offline_jobs

@@ -17,6 +17,10 @@ from repro.configs.registry import ARCHS
 from repro.models import build_model
 from repro.serving.engine import Request, ServingEngine, WaveEngine
 
+# every test here builds and decodes real JAX models (fast CI deselects
+# slow; the full tier-1 run still covers them)
+pytestmark = pytest.mark.slow
+
 
 def _serial_greedy(model, params, prompt, max_new):
     """Oracle: greedy rollout with full forward() per step, one request."""
