@@ -8,6 +8,13 @@ one pass over the KV cache, the dominant term for decode at 32k-524k context.
 
 The G dimension (q heads per KV head) rides inside the block as the row dim
 of a (G, block_t) score matrix, so the MXU sees (G x D) @ (D x block_t).
+
+``paged_decode_attention`` is the block-table variant for the paged KV
+layout (``repro.models.kvcache``): the KV tile for grid step ``j`` of slot
+``b`` is page ``block_table[b, j]`` of a shared (n_pages, page_size, K, D)
+pool, resolved in the BlockSpec index map from a scalar-prefetched block
+table — the page indirection costs no extra HBM pass, and per-slot valid
+lengths ride in a second prefetched scalar.
 """
 from __future__ import annotations
 
@@ -107,3 +114,96 @@ def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
         out_shape=jax.ShapeDtypeStruct((B, K, G, D), q.dtype),
         interpret=interpret,
     )(valid_len, q, k, v)
+
+
+def _paged_decode_kernel(vlen_ref, bt_ref, q_ref, k_ref, v_ref, o_ref,
+                         m_scr, l_scr, acc_scr, *,
+                         page_size: int, n_t_blocks: int, sm_scale: float):
+    b = pl.program_id(0)
+    tj = pl.program_id(2)
+
+    @pl.when(tj == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    t_start = tj * page_size
+    valid_len = vlen_ref[b]
+
+    @pl.when(t_start < valid_len)
+    def _step():
+        q = q_ref[0, 0].astype(jnp.float32)          # (G, D)
+        k = k_ref[0, :, 0].astype(jnp.float32)       # (ps, D)
+        v = v_ref[0, :, 0].astype(jnp.float32)       # (ps, D)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * sm_scale
+        t_idx = t_start + lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(t_idx < valid_len, s, NEG_INF)  # (G, ps)
+        m_prev = m_scr[...]                          # (G, 1)
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jnp.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(tj == n_t_blocks - 1)
+    def _finish():
+        lsum = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / lsum).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_decode_attention(q: jax.Array, k_pool: jax.Array,
+                           v_pool: jax.Array, block_table: jax.Array,
+                           valid_len: Optional[jax.Array] = None, *,
+                           interpret: bool = False) -> jax.Array:
+    """Flash-decode through a block table over a shared page pool.
+
+    q: (B, K, G, D); k_pool/v_pool: (n_pages, page_size, K, D) — the paged
+    cache layout of ``repro.models.kvcache``; block_table: (B, P) page ids
+    (sentinel entries >= n_pages clamp to the last page and are masked by
+    ``valid_len``); valid_len: scalar or (B,) per-slot valid lengths over
+    the slot's *logical* sequence of P * page_size positions.
+
+    Returns (B, K, G, D).
+    """
+    B, K, G, D = q.shape
+    n_pages, page_size = k_pool.shape[:2]
+    P = block_table.shape[1]
+    if valid_len is None:
+        valid_len = jnp.full((B,), P * page_size, jnp.int32)
+    else:
+        valid_len = jnp.broadcast_to(
+            jnp.asarray(valid_len, jnp.int32), (B,))
+    bt = jnp.clip(block_table.astype(jnp.int32), 0, n_pages - 1)
+
+    kernel = functools.partial(_paged_decode_kernel, page_size=page_size,
+                               n_t_blocks=P, sm_scale=D ** -0.5)
+    grid = (B, K, P)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, G, D),
+                             lambda b, h, j, vlen, bt: (b, h, 0, 0)),
+                pl.BlockSpec((1, page_size, 1, D),
+                             lambda b, h, j, vlen, bt: (bt[b, j], 0, h, 0)),
+                pl.BlockSpec((1, page_size, 1, D),
+                             lambda b, h, j, vlen, bt: (bt[b, j], 0, h, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, G, D),
+                                   lambda b, h, j, vlen, bt: (b, h, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((G, 1), jnp.float32),
+                pltpu.VMEM((G, 1), jnp.float32),
+                pltpu.VMEM((G, D), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, K, G, D), q.dtype),
+        interpret=interpret,
+    )(valid_len, bt, q, k_pool, v_pool)

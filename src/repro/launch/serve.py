@@ -31,7 +31,10 @@ from repro.sim.workload import poisson_arrivals
 from benchmarks.common import steady_metrics  # noqa: E402
 
 
-def _real_engine_demo(arch: str, n_reqs: int, slots: int) -> None:
+def _real_engine_demo(arch: str, n_reqs: int, slots: int,
+                      page_size: Optional[int] = None,
+                      n_pages: Optional[int] = None,
+                      chunk_threshold: Optional[int] = None) -> None:
     import time
 
     import jax
@@ -44,7 +47,8 @@ def _real_engine_demo(arch: str, n_reqs: int, slots: int) -> None:
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     eng = ServingEngine(model, params, max_batch=slots, max_len=64,
-                        decode_block=16)
+                        decode_block=16, page_size=page_size,
+                        n_pages=n_pages, chunk_threshold=chunk_threshold)
     rng = np.random.default_rng(0)
     reqs = [Request(rid=i,
                     prompt=rng.integers(0, cfg.vocab,
@@ -58,10 +62,15 @@ def _real_engine_demo(arch: str, n_reqs: int, slots: int) -> None:
     wall = time.perf_counter() - t0
     toks = sum(len(r.tokens) for r in reqs)
     s = eng.stats
-    print(f"real engine [{cfg.name}]: {len(reqs)} reqs / {toks} tokens in "
+    layout = (f"paged {eng.n_pages}x{eng.page_size}"
+              if eng._paged else "contiguous")
+    print(f"real engine [{cfg.name}] ({layout}): "
+          f"{len(reqs)} reqs / {toks} tokens in "
           f"{wall*1e3:.1f} ms = {toks/wall:.0f} tok/s "
           f"({s['prefill_dispatches']}+{s['decode_dispatches']} dispatches, "
-          f"{s['prefill_traces']}+{s['decode_traces']} compiles)")
+          f"{s['prefill_traces']}+{s['decode_traces']} compiles, "
+          f"peak {s['peak_concurrency']} slots, "
+          f"{s['chunk_admits']} chunked admits)")
 
 
 def main(argv: Optional[Sequence[str]] = None) -> None:
@@ -84,21 +93,46 @@ def main(argv: Optional[Sequence[str]] = None) -> None:
                          "directly, without the control plane")
     ap.add_argument("--real-reqs", type=int, default=32)
     ap.add_argument("--real-slots", type=int, default=8)
+    ap.add_argument("--page-size", type=int, default=None,
+                    help="paged KV cache page size in positions "
+                         "(default: contiguous max-shape slots)")
+    ap.add_argument("--n-pages", type=int, default=None,
+                    help="KV page pool size (default: max_batch * "
+                         "max_len / page_size, capacity parity)")
+    ap.add_argument("--chunk-threshold", type=int, default=None,
+                    help="chunk prompts longer than this through the "
+                         "decode loop instead of one prefill dispatch")
     args = ap.parse_args(argv)
 
     if args.real_engine:
-        _real_engine_demo(args.arch, args.real_reqs, args.real_slots)
+        _real_engine_demo(args.arch, args.real_reqs, args.real_slots,
+                          page_size=args.page_size, n_pages=args.n_pages,
+                          chunk_threshold=args.chunk_threshold)
         return
 
+    if args.backend != "real" and (args.page_size is not None
+                                   or args.n_pages is not None
+                                   or args.chunk_threshold is not None):
+        raise SystemExit(
+            "--page-size/--n-pages/--chunk-threshold configure the real "
+            "data plane; combine them with --backend real or "
+            "--real-engine (the sim backend has no KV cache to page)")
     if args.backend == "real" and args.arch == "all":
         raise SystemExit("--backend real needs a single --arch "
                          "(each arch builds real model params)")
     archs = None if args.arch == "all" else [ARCHS[args.arch]]
     from repro.core.master import MasterConfig
     cfg = MasterConfig(hedge_enabled=args.hedge)
+    engine_cfg = None
+    if args.backend == "real" and (args.page_size is not None
+                                   or args.chunk_threshold is not None):
+        from repro.serving.executor import EngineExecutorConfig
+        engine_cfg = EngineExecutorConfig(
+            page_size=args.page_size, n_pages=args.n_pages,
+            chunk_threshold=args.chunk_threshold)
     c = make_cluster(n_accel=args.workers, n_cpu=args.cpu_workers,
                      archs=archs, autoscale=not args.no_autoscale, cfg=cfg,
-                     backend=args.backend)
+                     backend=args.backend, engine_cfg=engine_cfg)
     arch_names = [a for a in (
         [args.arch] if args.arch != "all" else list(ARCHS))]
 

@@ -1,9 +1,23 @@
 """KV-cache and recurrent-state containers.
 
 Caches are plain pytrees (dicts of arrays) so they cross pjit/shard_map
-boundaries and checkpoint naturally. Attention caches are laid out
-(L, B, S_max, K, D) — layer-major so the per-layer scan can consume them as
-scan xs and emit updated slices as ys.
+boundaries and checkpoint naturally. Attention caches come in two layouts:
+
+* contiguous — (L, B, S_max, K, D), layer-major so the per-layer scan can
+  consume them as scan xs and emit updated slices as ys. Every batch slot
+  owns a private ``S_max`` run of positions.
+* paged — a shared page pool (L, n_pages, page_size, K, D) plus a per-slot
+  block table (B, S_max // page_size) of page indices. Logical position
+  ``p`` of slot ``b`` lives at ``pool[bt[b, p // page_size], p % page_size]``.
+  Unallocated block-table entries carry the sentinel ``n_pages`` (one past
+  the pool): writes routed there are dropped (scatter ``mode="drop"``) and
+  reads clamp to the last page, whose values are always masked off by the
+  caller's ``kv_valid_len``. The pool is shared across batch slots, so slot
+  count is no longer bound by worst-case context length — the serving
+  engine's page allocator hands pages to slots as their ``pos`` grows.
+
+Recurrent families' O(1) states (SSM, conv tails, xLSTM cells) have no
+sequence axis and stay batch-indexed in either layout.
 """
 from __future__ import annotations
 
@@ -19,6 +33,13 @@ Cache = Dict[str, Any]
 def alloc_attn_cache(n_layers: int, batch: int, max_len: int, n_kv: int,
                      head_dim: int, dtype) -> Cache:
     shape = (n_layers, batch, max_len, n_kv, head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def alloc_paged_attn_cache(n_layers: int, n_pages: int, page_size: int,
+                           n_kv: int, head_dim: int, dtype) -> Cache:
+    """Shared page pool: (L, n_pages, page_size, K, D) per leaf."""
+    shape = (n_layers, n_pages, page_size, n_kv, head_dim)
     return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
 
 
@@ -43,3 +64,52 @@ def update_layer_cache(k_cache: jax.Array, v_cache: jax.Array,
     k_cache = write(k_cache, k_new.astype(k_cache.dtype), pos)
     v_cache = write(v_cache, v_new.astype(v_cache.dtype), pos)
     return k_cache, v_cache
+
+
+def page_coords(block_table: jax.Array, pos: Any,
+                page_size: int) -> Tuple[jax.Array, jax.Array]:
+    """(page, offset) of logical position ``pos`` per slot.
+
+    block_table: (B, P) page indices; ``pos`` a scalar or (B,) vector.
+    Slots whose block-table entry is the sentinel (== n_pages) keep it, so
+    downstream scatters drop the write.
+    """
+    B = block_table.shape[0]
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
+    blk = jnp.clip(pos // page_size, 0, block_table.shape[1] - 1)
+    page = jnp.take_along_axis(block_table, blk[:, None], axis=1)[:, 0]
+    return page, pos % page_size
+
+
+def paged_update_layer_cache(k_pool: jax.Array, v_pool: jax.Array,
+                             k_new: jax.Array, v_new: jax.Array,
+                             block_table: jax.Array,
+                             pos: Any) -> Tuple[jax.Array, jax.Array]:
+    """Write one token's (B, 1, K, D) k/v at logical ``pos`` of each slot
+    into a shared (n_pages, page_size, K, D) pool through the block table.
+
+    The engine's page allocator guarantees no page is referenced by two
+    live slots, so the per-slot scatters never collide; sentinel pages
+    (freed or never-allocated slots) drop the write.
+    """
+    page, off = page_coords(block_table, pos, k_pool.shape[1])
+    k_pool = k_pool.at[page, off].set(k_new[:, 0].astype(k_pool.dtype),
+                                      mode="drop")
+    v_pool = v_pool.at[page, off].set(v_new[:, 0].astype(v_pool.dtype),
+                                      mode="drop")
+    return k_pool, v_pool
+
+
+def gather_block_kv(pool: jax.Array, block_table: jax.Array) -> jax.Array:
+    """Materialize each slot's logical KV view from the shared pool.
+
+    pool: (n_pages, page_size, K, D); block_table: (B, P).
+    Returns (B, P * page_size, K, D) — the same shape the contiguous layout
+    attends over (P * page_size == S_max), so the attention computation is
+    unchanged downstream. Sentinel entries clamp to the last page; their
+    positions are always >= the caller's ``kv_valid_len`` and mask out.
+    """
+    B, P = block_table.shape
+    ps = pool.shape[1]
+    pages = jnp.take(pool, block_table, axis=0, mode="clip")  # (B,P,ps,K,D)
+    return pages.reshape((B, P * ps) + pool.shape[2:])

@@ -343,6 +343,37 @@ def attention_core(
     return jnp.einsum("bkgst,btkd->bskgd", probs, v)
 
 
+def paged_attention_core(
+    q: jax.Array,                 # (B, 1, K, G, D) one decode token per slot
+    k_pool: jax.Array,            # (n_pages, page_size, K, D) shared pool
+    v_pool: jax.Array,
+    block_table: jax.Array,       # (B, P) page ids, sentinel = n_pages
+    *,
+    kv_valid_len: Any,            # scalar or (B,) per-slot valid lengths
+    impl: str = "xla",
+) -> jax.Array:
+    """Decode attention over a paged KV cache (vLLM-style block tables).
+
+    On the Pallas path the kernel walks the block table directly (HBM
+    traffic is one pass over the *live* pages); the XLA path materializes
+    the slot's logical view with a page gather and reuses the standard
+    masked ``attention_core``, which keeps outputs bit-identical to the
+    contiguous layout (P * page_size == S_max, and positions beyond
+    ``kv_valid_len`` mask to exact zeros either way).
+    """
+    from repro.models import kvcache as KV
+    if impl.startswith("pallas") and q.shape[1] == 1:
+        from repro.kernels.decode_attention import paged_decode_attention
+        out = paged_decode_attention(
+            q[:, 0], k_pool, v_pool, block_table, kv_valid_len,
+            interpret=impl == "pallas_interpret")
+        return out[:, None]
+    kc = KV.gather_block_kv(k_pool, block_table)
+    vc = KV.gather_block_kv(v_pool, block_table)
+    return attention_core(q, kc, vc, causal=False,
+                          kv_valid_len=kv_valid_len, impl="xla")
+
+
 def attn_params_init(rng, d_model: int, n_heads: int, n_kv: int, head_dim: int,
                      dtype) -> Params:
     ks = jax.random.split(rng, 4)

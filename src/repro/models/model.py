@@ -18,6 +18,11 @@ Serving extensions (used by the continuous-batching engine):
     positions leave the carried state untouched.
   * ``decode``'s ``pos`` may be a (B,) vector of per-sequence positions
     instead of a shared scalar (each batch slot at its own decode offset).
+  * ``decode``'s cache may carry a ``"bt"`` block table (B, P), in which
+    case the attention k/v leaves are shared page pools
+    (``repro.models.kvcache`` paged layout) and writes/reads route through
+    the slot's block table; recurrent O(1) state leaves stay slot-indexed.
+    Supported by the dense/moe/hybrid/vlm decode paths.
 """
 from __future__ import annotations
 

@@ -275,7 +275,10 @@ def prefill_moe(cfg: ArchConfig, params: Params, tokens: jax.Array,
 
 def decode_moe(cfg: ArchConfig, params: Params, cache, token: jax.Array, pos,
                parallel=None):
+    """``cache`` may carry a ``"bt"`` block table, in which case its k/v
+    leaves are shared page pools (see ``repro.models.kvcache``)."""
     dtype = jnp.dtype(cfg.dtype)
+    bt = cache.get("bt")
     x = L.embed_tokens(token, params["embed"], dtype)
 
     def body(carry, xs):
@@ -285,9 +288,15 @@ def decode_moe(cfg: ArchConfig, params: Params, cache, token: jax.Array, pos,
         positions = decode_positions(pos, carry.shape[0])
         q = L.apply_rope(q, positions, cfg.rope_theta)
         k = L.apply_rope(k, positions, cfg.rope_theta)
-        kc, vc = KV.update_layer_cache(kc, vc, k, v, pos)
-        o = L.attention_core(q, kc, vc, causal=False, kv_valid_len=pos + 1,
-                             impl=cfg.attention_impl)
+        if bt is None:
+            kc, vc = KV.update_layer_cache(kc, vc, k, v, pos)
+            o = L.attention_core(q, kc, vc, causal=False,
+                                 kv_valid_len=pos + 1,
+                                 impl=cfg.attention_impl)
+        else:
+            kc, vc = KV.paged_update_layer_cache(kc, vc, k, v, bt, pos)
+            o = L.paged_attention_core(q, kc, vc, bt, kv_valid_len=pos + 1,
+                                       impl=cfg.attention_impl)
         out = carry + L.attn_out(o, blk["attn"])
         out = out + moe_ffn(L.rmsnorm(out, blk["ln2"]), blk["moe"], cfg,
                             parallel)
@@ -296,4 +305,7 @@ def decode_moe(cfg: ArchConfig, params: Params, cache, token: jax.Array, pos,
     x, (ks, vs) = lax.scan(body, x, (params["layers"], cache["k"], cache["v"]))
     x = L.rmsnorm(x, params["ln_f"])
     logits = L.lm_logits(x, params["head"])
-    return logits, {"k": ks, "v": vs}
+    out_cache = {"k": ks, "v": vs}
+    if bt is not None:
+        out_cache["bt"] = bt
+    return logits, out_cache

@@ -398,8 +398,12 @@ def prefill_zamba(cfg: ArchConfig, params: Params, tokens: jax.Array,
 
 def decode_zamba(cfg: ArchConfig, params: Params, cache, token: jax.Array,
                  pos):
+    """``cache`` may carry a ``"bt"`` block table: the shared-block k/v
+    leaves are then (g, n_pages, page_size, K, D) shared pools while the
+    O(1) ssm/conv states stay batch-indexed (paging is attention-only)."""
     dtype = jnp.dtype(cfg.dtype)
     B = token.shape[0]
+    bt = cache.get("bt")
     x = L.embed_tokens(token, params["embed"], dtype)
     grouped, tail_p, g, tail = _split_mamba_stack(params, cfg)
     shared = params["shared"]
@@ -418,9 +422,15 @@ def decode_zamba(cfg: ArchConfig, params: Params, cache, token: jax.Array,
         positions = decode_positions(pos, B)
         q = L.apply_rope(q, positions, cfg.rope_theta)
         k = L.apply_rope(k, positions, cfg.rope_theta)
-        kc, vc = KV.update_layer_cache(kc, vc, k, v, pos)
-        o = L.attention_core(q, kc, vc, causal=False, kv_valid_len=pos + 1,
-                             impl=cfg.attention_impl)
+        if bt is None:
+            kc, vc = KV.update_layer_cache(kc, vc, k, v, pos)
+            o = L.attention_core(q, kc, vc, causal=False,
+                                 kv_valid_len=pos + 1,
+                                 impl=cfg.attention_impl)
+        else:
+            kc, vc = KV.paged_update_layer_cache(kc, vc, k, v, bt, pos)
+            o = L.paged_attention_core(q, kc, vc, bt, kv_valid_len=pos + 1,
+                                       impl=cfg.attention_impl)
         c = c + L.attn_out(o, shared["attn"])
         c = c + L.swiglu(L.rmsnorm(c, shared["ln2"]), shared["mlp"])
         return c, kc, vc
@@ -456,6 +466,8 @@ def decode_zamba(cfg: ArchConfig, params: Params, cache, token: jax.Array,
             [g_conv.reshape((-1,) + g_conv.shape[2:]), t_conv], axis=0),
         "k": ks, "v": vs,
     }
+    if bt is not None:
+        cache["bt"] = bt
     return logits, cache
 
 

@@ -190,19 +190,27 @@ def decode_positions(pos, batch: int) -> jax.Array:
     return jnp.reshape(pos, (batch, 1))
 
 
-def _decode_block(x, blk, kc, vc, pos, cfg: ArchConfig):
-    """One decode step through one block. x: (B,1,d); kc/vc: (B,Smax,K,D).
+def _decode_block(x, blk, kc, vc, pos, cfg: ArchConfig, bt=None):
+    """One decode step through one block. x: (B,1,d).
 
     ``pos`` is a shared scalar or a per-sequence (B,) vector of positions.
+    With ``bt=None`` kc/vc are contiguous (B,Smax,K,D) slot rows; with a
+    (B, P) block table they are shared (n_pages, page_size, K, D) pools and
+    the write/attend both route through the slot's block table.
     """
     h = L.rmsnorm(x, blk["ln1"])
     q, k, v = L.attn_qkv(h, blk["attn"])
     positions = decode_positions(pos, x.shape[0])
     q = L.apply_rope(q, positions, cfg.rope_theta)
     k = L.apply_rope(k, positions, cfg.rope_theta)
-    kc, vc = KV.update_layer_cache(kc, vc, k, v, pos)
-    o = L.attention_core(q, kc, vc, causal=False, kv_valid_len=pos + 1,
-                         impl=cfg.attention_impl)
+    if bt is None:
+        kc, vc = KV.update_layer_cache(kc, vc, k, v, pos)
+        o = L.attention_core(q, kc, vc, causal=False, kv_valid_len=pos + 1,
+                             impl=cfg.attention_impl)
+    else:
+        kc, vc = KV.paged_update_layer_cache(kc, vc, k, v, bt, pos)
+        o = L.paged_attention_core(q, kc, vc, bt, kv_valid_len=pos + 1,
+                                   impl=cfg.attention_impl)
     x = x + L.attn_out(o, blk["attn"])
     x = x + L.swiglu(L.rmsnorm(x, blk["ln2"]), blk["mlp"])
     return x, kc, vc
@@ -210,19 +218,26 @@ def _decode_block(x, blk, kc, vc, pos, cfg: ArchConfig):
 
 def decode_dense(cfg: ArchConfig, params: Params, cache, token: jax.Array,
                  pos) -> Tuple[jax.Array, Any]:
-    """serve_step: one new token against the cache. token: (B,1) int32."""
+    """serve_step: one new token against the cache. token: (B,1) int32.
+
+    ``cache`` may carry a ``"bt"`` block table, in which case its k/v
+    leaves are shared page pools (see ``repro.models.kvcache``)."""
     dtype = jnp.dtype(cfg.dtype)
+    bt = cache.get("bt")
     x = L.embed_tokens(token, params["embed"], dtype)
 
     def body(carry, xs):
         blk, kc, vc = xs
-        out, kc, vc = _decode_block(carry, blk, kc, vc, pos, cfg)
+        out, kc, vc = _decode_block(carry, blk, kc, vc, pos, cfg, bt=bt)
         return out, (kc, vc)
 
     x, (ks, vs) = lax.scan(body, x, (params["layers"], cache["k"], cache["v"]))
     x = L.rmsnorm(x, params["ln_f"])
     logits = L.lm_logits(x, params["head"])
-    return logits, {"k": ks, "v": vs}
+    out_cache = {"k": ks, "v": vs}
+    if bt is not None:
+        out_cache["bt"] = bt
+    return logits, out_cache
 
 
 # ---------------------------------------------------------------------------
@@ -316,6 +331,7 @@ def decode_vlm(cfg: ArchConfig, params: Params, cache, token: jax.Array, pos):
     dtype = jnp.dtype(cfg.dtype)
     n_cross = cfg.n_layers // cfg.cross_attn_every
     n_self_per = cfg.cross_attn_every - 1
+    bt = cache.get("bt")
     x = L.embed_tokens(token, params["embed"], dtype)
 
     self_grouped = jax.tree.map(
@@ -327,7 +343,7 @@ def decode_vlm(cfg: ArchConfig, params: Params, cache, token: jax.Array, pos):
 
         def inner(c, layer_xs):
             blk, k1, v1 = layer_xs
-            out, k1, v1 = _decode_block(c, blk, k1, v1, pos, cfg)
+            out, k1, v1 = _decode_block(c, blk, k1, v1, pos, cfg, bt=bt)
             return out, (k1, v1)
 
         carry, (kc, vc) = lax.scan(inner, carry, (self_blks, kc, vc))
@@ -345,7 +361,10 @@ def decode_vlm(cfg: ArchConfig, params: Params, cache, token: jax.Array, pos):
                             cache["k"], cache["v"], cache["xk"], cache["xv"]))
     x = L.rmsnorm(x, params["ln_f"])
     logits = L.lm_logits(x, params["head"])
-    return logits, {"k": ks, "v": vs, "xk": cache["xk"], "xv": cache["xv"]}
+    out_cache = {"k": ks, "v": vs, "xk": cache["xk"], "xv": cache["xv"]}
+    if bt is not None:
+        out_cache["bt"] = bt
+    return logits, out_cache
 
 
 # ---------------------------------------------------------------------------

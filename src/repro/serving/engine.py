@@ -38,6 +38,43 @@ decode-segment program per engine.
 inside a measured service time. ``stats`` counts actual retraces
 (``prefill_traces`` / ``decode_traces``), which tests pin down.
 
+**Paged KV cache (block tables).** With ``page_size=None`` (default) every
+slot owns a contiguous ``max_len`` run of KV positions, so slot count is
+bound by worst-case context length even when most requests are short —
+exactly the over-provisioning INFaaS's model-level autoscaling argues
+against. With ``page_size=P`` the attention cache becomes a shared page
+pool ``(L, n_pages, P, K, D)`` plus a per-slot block table
+(``repro.models.kvcache``): admission is gated on *free pages* (a request
+reserves ``ceil((prompt + max_new - 1) / P)`` pages, its worst case) rather
+than free max-shape slots, pages are appended to a slot's block table as
+its ``pos`` crosses a page boundary (topped up ahead of each decode
+segment) and returned to the free list the moment the sequence finishes.
+``n_pages`` defaults to ``max_batch * max_len / page_size`` (capacity
+parity); provisioning fewer pages than slots-worth is the point — a
+long-tail stream of mostly-short requests runs ``n_pages * P / max_len``-
+slot hardware at far higher concurrency. Recurrent families' O(1) states
+(SSM/conv/xLSTM) have no sequence axis and stay slot-indexed; greedy
+outputs are bit-identical to the contiguous engine (the gathered view an
+attention step sees is position-for-position the same tensor).
+
+**Chunked prefill.** A long prompt's monolithic prefill dispatch used to
+stall every in-flight decode for the whole prompt length. With
+``chunk_threshold=T`` set, prompts longer than ``T`` skip the prefill
+dispatch entirely: the prompt is staged in a device-resident per-slot
+prompt buffer and *teacher-forced through the fused decode segment* —
+each segment consumes up to ``decode_block`` prompt tokens for that slot
+(writing KV, discarding logits until the prompt is exhausted, then
+switching to greedy emission) while other slots keep generating in the
+same dispatch. A near-``max_len`` prompt admitted mid-stream therefore
+delays in-flight decodes by zero extra dispatches. Chunked admission is
+enabled for the dense/hybrid families (their zero-initialized slot state
+is a valid empty decode state); audio/vlm need encoder KV from prefill,
+xLSTM's empty state is not all-zeros, and MoE's expert-capacity keep/drop
+decisions depend on the co-batched token set (prompt tokens fed inside
+the shared decode batch would diverge from the solo prefill the engine
+guarantees), so those families admit whole prompts regardless of the
+knob.
+
 **Open-loop core.** The engine is step-driven: state (slot occupancy,
 pending queue, per-slot generations) persists on the engine, and the three
 phases of the serving loop are separately callable —
@@ -109,12 +146,86 @@ def bucket_len(n: int, minimum: int = 8, maximum: Optional[int] = None) -> int:
     return b
 
 
+class PageAllocator:
+    """Host-side accounting for the shared KV page pool.
+
+    Admission reserves a slot's worst case (``ceil(n_positions / page_size)``
+    pages for ``prompt_len + max_new - 1`` written positions) so a decode
+    can never strand mid-stream for lack of pages — ``cover()`` calls, which
+    lazily hand out physical pages as ``pos`` grows, always succeed within
+    the reservation. Invariants (pinned by the hypothesis property test):
+    no page is ever held by two live slots, ``free + live == n_pages`` at
+    all times, and a full drain returns every page to the free list.
+    """
+
+    def __init__(self, n_pages: int, page_size: int):
+        if n_pages < 1 or page_size < 1:
+            raise ValueError(f"bad pool: {n_pages} pages x {page_size}")
+        self.n_pages = n_pages
+        self.page_size = page_size
+        self._free: List[int] = list(range(n_pages))[::-1]
+        self._pages: Dict[int, List[int]] = {}     # slot -> held page ids
+        self._reserved: Dict[int, int] = {}        # slot -> worst-case pages
+
+    def pages_needed(self, n_positions: int) -> int:
+        return max(0, -(-int(n_positions) // self.page_size))
+
+    @property
+    def committed(self) -> int:
+        """Pages promised to live slots (held now or claimable later)."""
+        return sum(self._reserved.values())
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    def live_pages(self) -> List[int]:
+        return [p for pages in self._pages.values() for p in pages]
+
+    def pages_of(self, slot: int) -> List[int]:
+        return list(self._pages.get(slot, ()))
+
+    def can_reserve(self, n_positions: int) -> bool:
+        return self.committed + self.pages_needed(n_positions) <= self.n_pages
+
+    def reserve(self, slot: int, n_positions: int) -> None:
+        """Admit ``slot``: commit its worst-case page count (no pages yet)."""
+        if slot in self._reserved:
+            raise ValueError(f"slot {slot} already live")
+        need = self.pages_needed(n_positions)
+        if self.committed + need > self.n_pages:
+            raise ValueError(f"over-committed: {self.committed}+{need} "
+                             f"> {self.n_pages}")
+        self._reserved[slot] = need
+        self._pages[slot] = []
+
+    def cover(self, slot: int, n_positions: int) -> List[int]:
+        """Grow ``slot`` to cover positions [0, n); returns the new pages."""
+        held = self._pages[slot]
+        target = min(self.pages_needed(n_positions), self._reserved[slot])
+        grown = []
+        while len(held) < target:
+            page = self._free.pop()
+            grown.append(page)
+            held.append(page)
+        return grown
+
+    def release(self, slot: int) -> List[int]:
+        """Free all of ``slot``'s pages (sequence finished)."""
+        pages = self._pages.pop(slot)
+        del self._reserved[slot]
+        self._free.extend(pages)
+        return pages
+
+
 class ServingEngine:
     """Continuous-batching engine over one model + params (greedy decode)."""
 
     def __init__(self, model: Model, params: Any, max_batch: int = 8,
                  max_len: int = 128, decode_block: int = 16,
-                 min_bucket: int = 8):
+                 min_bucket: int = 8, page_size: Optional[int] = None,
+                 n_pages: Optional[int] = None,
+                 chunk_threshold: Optional[int] = None):
         self.model = model
         self.params = params
         self.max_batch = max_batch
@@ -125,35 +236,114 @@ class ServingEngine:
         # so grouped admission could change token-drop decisions vs a
         # serial run; admit MoE prompts one per dispatch to stay exact.
         self._group_admit = model.cfg.family != "moe"
+        # Chunked prefill teacher-forces the prompt through the decode
+        # path from a zero-initialized slot state; families whose empty
+        # state is not all-zeros (xLSTM's -inf stabilizers) or whose
+        # prefill computes encoder KV (audio/vlm) admit whole prompts.
+        # MoE is excluded too: its expert-capacity keep/drop decisions
+        # depend on the co-batched token set, so feeding prompt tokens
+        # inside the shared decode batch would diverge from the solo
+        # prefill the engine otherwise guarantees (see _group_admit).
+        self._chunk_ok = model.cfg.family in ("dense", "hybrid")
+        self.chunk_threshold = \
+            chunk_threshold if self._chunk_ok else None
         self.stats: Dict[str, int] = {
-            "prefill_traces": 0, "decode_traces": 0,
+            "prefill_traces": 0, "decode_traces": 0, "chunk_traces": 0,
             "prefill_dispatches": 0, "decode_dispatches": 0,
             "decode_steps": 0, "tokens_generated": 0, "admitted": 0,
+            "chunk_admits": 0, "peak_concurrency": 0,
         }
         shapes = model.cache_shapes(max_batch, max_len, enc_len=max_len)
-        self._cache = jax.tree.map(
-            lambda s: jnp.zeros(s.shape, s.dtype), shapes)
-        self._tok = jnp.zeros((max_batch, 1), jnp.int32)
-        self._pos = jnp.zeros((max_batch,), jnp.int32)
-        self._rem = jnp.zeros((max_batch,), jnp.int32)
         # Per-leaf batch axis, found by diffing cache shapes at two batch
         # sizes (family-agnostic: attention caches, SSM/conv states, and
-        # grouped VLM layouts all place batch differently).
+        # grouped VLM layouts all place batch differently); per-leaf
+        # sequence axis likewise by diffing two max_lens (-1 for the O(1)
+        # recurrent states, which have none and are never paged).
         s2 = model.cache_shapes(2, max_len, enc_len=max_len)
         s3 = model.cache_shapes(3, max_len, enc_len=max_len)
         self._batch_axes = jax.tree.map(
             lambda a, b: next(i for i, (x, y) in
                               enumerate(zip(a.shape, b.shape)) if x != y),
             s2, s3)
+        l2 = model.cache_shapes(2, max_len + 8, enc_len=max_len + 8)
+        self._seq_axes = jax.tree.map(
+            lambda a, b: next((i for i, (x, y) in
+                               enumerate(zip(a.shape, b.shape)) if x != y),
+                              -1),
+            s2, l2)
+        # ----- paged layout -------------------------------------------
+        self.page_size = page_size
+        if page_size is not None:
+            if model.cfg.family == "audio":
+                raise ValueError(
+                    "paged KV unsupported for the audio family (its "
+                    "unmasked cross-attention reads padded encoder rows); "
+                    "use page_size=None")
+            if max_len % page_size != 0:
+                raise ValueError(f"max_len {max_len} not a multiple of "
+                                 f"page_size {page_size}")
+            self.pages_per_slot = max_len // page_size
+            self.n_pages = (max_batch * self.pages_per_slot
+                            if n_pages is None else n_pages)
+            pageable = any(s != -1 for s in jax.tree.leaves(self._seq_axes))
+        else:
+            pageable = False
+        if pageable:
+            self._alloc: Optional[PageAllocator] = \
+                PageAllocator(self.n_pages, page_size)
+            # block-table mirror handed to every device dispatch; the
+            # sentinel n_pages drops writes / clamps (masked) reads
+            self._bt = np.full((max_batch, self.pages_per_slot),
+                               self.n_pages, np.int32)
+            self._cache = jax.tree.map(
+                lambda s, bax, sax: jnp.zeros(
+                    self._pool_shape(s.shape, bax, sax), s.dtype),
+                shapes, self._batch_axes, self._seq_axes)
+        else:
+            # contiguous layout — also the path for attention-free
+            # families (pure-recurrent xLSTM), whose O(1) states have
+            # nothing to page regardless of the knob
+            if page_size is None:
+                self.pages_per_slot = 0
+                self.n_pages = 0
+            self._alloc = None
+            self._bt = None
+            self._cache = jax.tree.map(
+                lambda s: jnp.zeros(s.shape, s.dtype), shapes)
+        self._paged = self._bt is not None
+        self._tok = jnp.zeros((max_batch, 1), jnp.int32)
+        self._pos = jnp.zeros((max_batch,), jnp.int32)
+        self._rem = jnp.zeros((max_batch,), jnp.int32)
+        # chunked-prefill staging: per-slot prompt buffer + prompt length
+        # (0 = slot admitted via prefill, nothing left to feed)
+        self._plen = jnp.zeros((max_batch,), jnp.int32)
+        self._pbuf = jnp.zeros((max_batch, max_len), jnp.int32)
         self._prefill_fns: Dict[int, Any] = {}
         self._decode_fn = None
+        self._chunk_fn = None
         # open-loop state: persists across submit()/step() calls so
         # requests can arrive while earlier ones are mid-decode
         self._pending: deque = deque()
         self._slot_req: List[Optional[Request]] = [None] * max_batch
         self._gen: Dict[int, List[int]] = {}
         self._free: List[int] = list(range(max_batch))[::-1]
+        self._slot_pos = np.zeros((max_batch,), np.int64)
         self._completed: List[Request] = []
+
+    def _pool_shape(self, dims: Tuple[int, ...], bax: int, sax: int):
+        """Contiguous leaf shape -> shared-pool shape: drop the batch axis,
+        split the sequence axis into (n_pages, page_size). State leaves
+        (sax == -1) keep their slot-indexed shape."""
+        if sax == -1:
+            return dims
+        assert bax < sax, (dims, bax, sax)
+        return (dims[:bax] + dims[bax + 1:sax]
+                + (self.n_pages, self.page_size) + dims[sax + 1:])
+
+    def _n_positions(self, r: Request) -> int:
+        """KV positions a request writes over its lifetime: the prompt plus
+        one per generated token except the last (never fed back)."""
+        return len(r.prompt) + max(r.max_new_tokens, 1) - 1
 
     # ------------------------------------------------------------------
     # compiled programs (keyed on (bucket_batch, bucket_len) shape)
@@ -163,13 +353,17 @@ class ServingEngine:
         if fn is not None:
             return fn
         model, cfg = self.model, self.model.cfg
-        baxes = self._batch_axes
+        baxes, saxes = self._batch_axes, self._seq_axes
+        paged, ps = self._paged, self.page_size
 
-        def prefill_admit(params, cache, tok, pos, rem, tokens, lengths,
-                          slots, max_news):
+        def prefill_admit(params, cache, tok, pos, rem, plen, tokens,
+                          lengths, slots, max_news, page_rows=None):
             # tokens: (nbatch, bucket); lengths/slots/max_news: (nbatch,).
             # Padding rows carry slot == max_batch: out-of-bounds scatter
-            # indices are dropped, so they touch no live slot.
+            # indices are dropped, so they touch no live slot. In paged
+            # mode page_rows (nbatch, ceil(bucket/ps)) routes each leaf's
+            # cache slice into the slot's pages (sentinel rows drop —
+            # bucket padding past the allocated pages never lands).
             self.stats["prefill_traces"] += 1   # Python side effect: runs
             batch = {"tokens": tokens,          # once per (re)trace only
                      "length": lengths}
@@ -192,22 +386,85 @@ class ServingEngine:
                 arr = arr.at[slots].set(rows, mode="drop")
                 return jnp.moveaxis(arr, 0, bax)
 
-            cache = jax.tree.map(insert, cache, pcache, baxes)
+            def insert_paged(pool_leaf, new_leaf, bax, sax):
+                # page-shape the slice: split its sequence axis into
+                # (n_pages_of_bucket, page_size) rows, then scatter each
+                # row to its block-table page (shared pool, batch-free)
+                if sax == -1:
+                    return insert(pool_leaf, new_leaf, bax)
+                n_rows = page_rows.shape[1]
+                new = jnp.moveaxis(new_leaf, bax, 0)    # (nb, .., S@sax, ..)
+                padspec = [(0, 0)] * new.ndim
+                padspec[sax] = (0, n_rows * ps - new.shape[sax])
+                new = jnp.pad(new, padspec)
+                new = new.reshape(new.shape[:sax] + (n_rows, ps)
+                                  + new.shape[sax + 1:])
+                new = jnp.moveaxis(new, sax, 1)         # (nb, P_b, .., ps, ..)
+                new = new.reshape((nbatch * n_rows,) + new.shape[2:])
+                pool = jnp.moveaxis(pool_leaf, sax - 1, 0)
+                pool = pool.at[page_rows.reshape(-1)].set(
+                    new.astype(pool.dtype), mode="drop")
+                return jnp.moveaxis(pool, 0, sax - 1)
+
+            if paged:
+                cache = jax.tree.map(insert_paged, cache, pcache,
+                                     baxes, saxes)
+            else:
+                cache = jax.tree.map(insert, cache, pcache, baxes)
             tok = tok.at[slots].set(firsts[:, None], mode="drop")
             pos = pos.at[slots].set(lengths, mode="drop")
             rem = rem.at[slots].set(max_news - 1, mode="drop")
-            return cache, tok, pos, rem, firsts
+            plen = plen.at[slots].set(jnp.zeros_like(max_news), mode="drop")
+            return cache, tok, pos, rem, plen, firsts
 
         fn = jax.jit(prefill_admit)
         self._prefill_fns[key] = fn
         return fn
 
+    def _get_chunk_admit(self):
+        """Compiled chunked admission: stage the full prompt in the slot's
+        device prompt buffer (no prefill dispatch) and reset the slot's
+        recurrent state rows; the decode segment teacher-forces the prompt
+        from there, ``decode_block`` tokens per segment."""
+        if self._chunk_fn is not None:
+            return self._chunk_fn
+        baxes, saxes = self._batch_axes, self._seq_axes
+
+        def chunk_admit(cache, tok, pos, rem, plen, pbuf, slot, row,
+                        plen_v, max_new):
+            # slot/plen_v/max_new: (1,); row: (1, max_len)
+            self.stats["chunk_traces"] += 1
+
+            def zero_state(leaf, bax, sax):
+                # KV leaves need no reset: a position is always rewritten
+                # by this slot before any masked read can include it.
+                # O(1) state leaves carry the previous occupant's final
+                # state and must start from the empty (zero) state.
+                if sax != -1:
+                    return leaf
+                arr = jnp.moveaxis(leaf, bax, 0)
+                arr = arr.at[slot].set(jnp.zeros_like(arr[:1]))
+                return jnp.moveaxis(arr, 0, bax)
+
+            cache = jax.tree.map(zero_state, cache, baxes, saxes)
+            tok = tok.at[slot].set(row[:, :1])
+            pos = pos.at[slot].set(jnp.zeros((1,), jnp.int32))
+            rem = rem.at[slot].set(max_new)
+            plen = plen.at[slot].set(plen_v)
+            pbuf = pbuf.at[slot].set(row)
+            return cache, tok, pos, rem, plen, pbuf
+
+        self._chunk_fn = jax.jit(chunk_admit)
+        return self._chunk_fn
+
     def _get_decode(self):
         if self._decode_fn is not None:
             return self._decode_fn
         model, steps, slots = self.model, self.decode_block, self.max_batch
+        paged, max_len = self._paged, self.max_len
 
-        def decode_segment(params, cache, tok, pos, rem):
+        def decode_segment(params, cache, tok, pos, rem, plen, pbuf,
+                           bt=None):
             self.stats["decode_traces"] += 1
 
             def cond(st):
@@ -217,13 +474,24 @@ class ServingEngine:
             def body(st):
                 i, cache, tok, pos, rem, out = st
                 active = rem > 0
-                logits, cache = model.decode(params, cache, tok, pos)
+                dcache = dict(cache, bt=bt) if paged else cache
+                logits, dcache = model.decode(params, dcache, tok, pos)
+                if paged:
+                    dcache = {k: v for k, v in dcache.items() if k != "bt"}
+                cache = dcache
                 nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
-                emit = jnp.where(active, nxt, -1)
+                # chunked prefill: while prompt tokens remain, feed the
+                # next one instead of the sampled token and emit nothing
+                feeding = (pos + 1) < plen
+                pnext = jnp.take_along_axis(
+                    pbuf, jnp.clip(pos + 1, 0, max_len - 1)[:, None],
+                    axis=1)[:, 0]
+                nxt = jnp.where(feeding, pnext, nxt)
+                emit = jnp.where(active & ~feeding, nxt, -1)
                 out = lax.dynamic_update_slice(out, emit[:, None], (0, i))
                 tok = jnp.where(active[:, None], nxt[:, None], tok)
                 pos = jnp.where(active, pos + 1, pos)
-                rem = jnp.where(active, rem - 1, rem)
+                rem = jnp.where(active & ~feeding, rem - 1, rem)
                 return i + 1, cache, tok, pos, rem, out
 
             out0 = jnp.full((slots, steps), -1, jnp.int32)
@@ -231,7 +499,12 @@ class ServingEngine:
                 cond, body, (jnp.int32(0), cache, tok, pos, rem, out0))
             return cache, tok, pos, rem, out, i
 
-        self._decode_fn = jax.jit(decode_segment)
+        if paged:
+            self._decode_fn = jax.jit(decode_segment)
+        else:
+            self._decode_fn = jax.jit(
+                lambda params, cache, tok, pos, rem, plen, pbuf:
+                decode_segment(params, cache, tok, pos, rem, plen, pbuf))
         return self._decode_fn
 
     # ------------------------------------------------------------------
@@ -245,25 +518,47 @@ class ServingEngine:
         out of bounds (dropped), so engine state is untouched; subsequent
         serving on these buckets never recompiles.
         """
+        lens = [n for n in prompt_lens
+                if self.chunk_threshold is None or n <= self.chunk_threshold]
         buckets = {bucket_len(max(n, 1), self.min_bucket, self.max_len)
-                   for n in list(prompt_lens) + [1]}
+                   for n in lens + [1]}       # chunked lens never prefill
         nbatches = {1, self.max_batch} if self._group_admit else {1}
         for b in sorted(buckets):
             for nb in sorted(nbatches):
                 if (nb, b) in self._prefill_fns:
                     continue        # already compiled; skip the dummy run
                 fn = self._get_prefill(b, nb)
-                out = fn(self.params, self._cache, self._tok, self._pos,
-                         self._rem, np.zeros((nb, b), np.int32),
-                         np.ones((nb,), np.int32),
-                         np.full((nb,), self.max_batch, np.int32),
-                         np.ones((nb,), np.int32))
+                args = [self.params, self._cache, self._tok, self._pos,
+                        self._rem, self._plen, np.zeros((nb, b), np.int32),
+                        np.ones((nb,), np.int32),
+                        np.full((nb,), self.max_batch, np.int32),
+                        np.ones((nb,), np.int32)]
+                if self._paged:
+                    args.append(np.full((nb, self._page_rows_for(b)),
+                                        self.n_pages, np.int32))
+                out = fn(*args)
                 jax.block_until_ready(out[-1])
         if include_decode and self._decode_fn is None:
             fn = self._get_decode()
-            out = fn(self.params, self._cache, self._tok, self._pos,
-                     jnp.zeros((self.max_batch,), jnp.int32))
+            args = [self.params, self._cache, self._tok, self._pos,
+                    jnp.zeros((self.max_batch,), jnp.int32), self._plen,
+                    self._pbuf]
+            if self._paged:
+                args.append(self._bt)
+            out = fn(*args)
             jax.block_until_ready(out[-1])
+        if self.chunk_threshold is not None and self._chunk_fn is None:
+            fn = self._get_chunk_admit()
+            out = fn(self._cache, self._tok, self._pos, self._rem,
+                     self._plen, self._pbuf,
+                     np.full((1,), self.max_batch, np.int32),
+                     np.zeros((1, self.max_len), np.int32),
+                     np.zeros((1,), np.int32), np.zeros((1,), np.int32))
+            jax.block_until_ready(out[1])
+
+    def _page_rows_for(self, bucket: int) -> int:
+        """Block-table rows a bucket-wide prefill slice spans."""
+        return -(-bucket // self.page_size)
 
     # ------------------------------------------------------------------
     def _admit_group(self, bucket: int, rs: List[Request],
@@ -272,7 +567,10 @@ class ServingEngine:
 
         Admit batches are bucketed to {1, max_batch} so the executable
         count stays at <= 2 per prompt bucket; padding rows point their
-        scatter index past the last slot and are dropped.
+        scatter index past the last slot and are dropped. In paged mode
+        each request's prompt pages are allocated here (its block-table
+        row was reserved at pop time) and the prefill scatters page-shaped
+        cache slices through them.
         """
         m = len(rs)
         nb = 1 if m == 1 else self.max_batch
@@ -286,12 +584,44 @@ class ServingEngine:
             slot_idx[j] = s
             max_news[j] = max(r.max_new_tokens, 1)
         fn = self._get_prefill(bucket, nb)
-        self._cache, self._tok, self._pos, self._rem, firsts = fn(
-            self.params, self._cache, self._tok, self._pos, self._rem,
-            tokens, lengths, slot_idx, max_news)
+        args = [self.params, self._cache, self._tok, self._pos, self._rem,
+                self._plen, tokens, lengths, slot_idx, max_news]
+        if self._paged:
+            n_rows = self._page_rows_for(bucket)
+            page_rows = np.full((nb, n_rows), self.n_pages, np.int32)
+            for j, (r, s) in enumerate(zip(rs, slots)):
+                self._grow_slot(s, len(r.prompt))
+                page_rows[j] = self._bt[s, :n_rows]
+            args.append(page_rows)
+        (self._cache, self._tok, self._pos, self._rem, self._plen,
+         firsts) = fn(*args)
         self.stats["prefill_dispatches"] += 1
         self.stats["admitted"] += m
         return np.asarray(firsts)[:m]
+
+    def _grow_slot(self, slot: int, n_positions: int) -> None:
+        """Extend ``slot``'s block table to cover positions [0, n)."""
+        held = len(self._alloc.pages_of(slot))
+        new = self._alloc.cover(slot, n_positions)
+        if new:
+            self._bt[slot, held:held + len(new)] = new
+
+    def _admit_chunk(self, r: Request, slot: int) -> None:
+        """Chunked admission: no prefill dispatch — stage the prompt in
+        the slot's device prompt buffer; the next decode segments feed it
+        ``decode_block`` tokens at a time."""
+        plen = len(r.prompt)
+        row = np.zeros((1, self.max_len), np.int32)
+        row[0, :plen] = r.prompt
+        fn = self._get_chunk_admit()
+        (self._cache, self._tok, self._pos, self._rem, self._plen,
+         self._pbuf) = fn(
+            self._cache, self._tok, self._pos, self._rem, self._plen,
+            self._pbuf, np.asarray([slot], np.int32), row,
+            np.asarray([plen], np.int32),
+            np.asarray([max(r.max_new_tokens, 1)], np.int32))
+        self.stats["chunk_admits"] += 1
+        self.stats["admitted"] += 1
 
     # ------------------------------------------------------------------
     # open-loop core: submit / step / drain_completions
@@ -307,6 +637,12 @@ class ServingEngine:
                 f"request {r.rid}: prompt_len {len(r.prompt)} + max_new "
                 f"{r.max_new_tokens} exceeds engine max_len "
                 f"{self.max_len}")
+        if self._alloc is not None:
+            need = self._alloc.pages_needed(self._n_positions(r))
+            if need > self.n_pages:
+                raise ValueError(
+                    f"request {r.rid}: needs {need} pages but the pool "
+                    f"holds {self.n_pages}; it could never be admitted")
 
     def submit(self, r: Request) -> None:
         """Enqueue a request; may be called at any time, including while
@@ -318,38 +654,77 @@ class ServingEngine:
         self._pending.append(r)
 
     def _admit_pending(self) -> None:
-        """Fill free slots from the pending queue (grouped by bucket)."""
-        if not (self._pending and self._free):
-            return
-        take = min(len(self._free), len(self._pending))
-        chunk = [self._pending.popleft() for _ in range(take)]
-        groups: Dict[int, List[Request]] = {}
-        for r in chunk:
+        """Fill free slots from the pending queue (grouped by bucket).
+
+        In paged mode admission is additionally gated on free pages: the
+        queue head must fit its worst-case page reservation before it (or
+        anything behind it — FIFO) is admitted. Prompts longer than
+        ``chunk_threshold`` take the chunked path; the rest prefill."""
+        prefills: List[Tuple[Request, int]] = []
+        while self._pending and self._free:
+            r = self._pending[0]
+            if self._alloc is not None and \
+                    not self._alloc.can_reserve(self._n_positions(r)):
+                break
+            self._pending.popleft()
+            slot = self._free.pop()
+            if self._alloc is not None:
+                self._alloc.reserve(slot, self._n_positions(r))
+            if self.chunk_threshold is not None and \
+                    len(r.prompt) > self.chunk_threshold:
+                self._admit_chunk(r, slot)
+                self._gen[slot] = []        # first token comes via emit
+                self._slot_req[slot] = r
+                self._slot_pos[slot] = 0
+            else:
+                prefills.append((r, slot))
+        groups: Dict[int, List[Tuple[Request, int]]] = {}
+        for r, s in prefills:
             b = bucket_len(len(r.prompt), self.min_bucket, self.max_len)
-            groups.setdefault(b, []).append(r)
-        for b, rs in sorted(groups.items()):
-            units = [rs] if self._group_admit else [[r] for r in rs]
+            groups.setdefault(b, []).append((r, s))
+        for b, pairs in sorted(groups.items()):
+            units = [pairs] if self._group_admit else \
+                [[p] for p in pairs]
             for unit in units:
-                slots = [self._free.pop() for _ in unit]
-                firsts = self._admit_group(b, unit, slots)
-                for r, s, f in zip(unit, slots, firsts):
+                rs = [r for r, _ in unit]
+                slots = [s for _, s in unit]
+                firsts = self._admit_group(b, rs, slots)
+                for r, s, f in zip(rs, slots, firsts):
                     self._gen[s] = [int(f)]
                     self._slot_req[s] = r
+                    self._slot_pos[s] = len(r.prompt)
 
     def step(self) -> int:
         """One engine step: admit pending requests into free slots, run one
         fused decode segment, harvest finished slots. Returns the number of
         decode steps executed (0 when the engine is idle)."""
         self._admit_pending()
-        if all(r is None for r in self._slot_req):
+        live = sum(r is not None for r in self._slot_req)
+        if live == 0:
             return 0
+        self.stats["peak_concurrency"] = max(
+            self.stats["peak_concurrency"], live)
+        if self._alloc is not None:
+            # append pages ahead of the segment: each active slot's pos
+            # advances by at most decode_block positions before the next
+            # host boundary (reservation guarantees these never fail)
+            for s, r in enumerate(self._slot_req):
+                if r is None:
+                    continue
+                cover = min(int(self._slot_pos[s]) + self.decode_block,
+                            self._n_positions(r))
+                self._grow_slot(s, cover)
         decode = self._get_decode()
+        args = [self.params, self._cache, self._tok, self._pos, self._rem,
+                self._plen, self._pbuf]
+        if self._paged:
+            args.append(self._bt)
         self._cache, self._tok, self._pos, self._rem, out, n_steps = \
-            decode(self.params, self._cache, self._tok, self._pos,
-                   self._rem)
+            decode(*args)
         self.stats["decode_dispatches"] += 1
         out_np = np.asarray(out)                     # the one host sync
         rem_np = np.asarray(self._rem)
+        self._slot_pos = np.asarray(self._pos).astype(np.int64)
         self.stats["decode_steps"] += int(n_steps)
         now = time.perf_counter()
         for slot, r in enumerate(self._slot_req):
@@ -364,6 +739,10 @@ class ServingEngine:
                 self.stats["tokens_generated"] += len(r.tokens)
                 self._slot_req[slot] = None
                 self._free.append(slot)
+                if self._alloc is not None:
+                    # pages return to the pool the moment a sequence ends
+                    self._alloc.release(slot)
+                    self._bt[slot, :] = self.n_pages
                 self._completed.append(r)
         return int(n_steps)
 

@@ -33,7 +33,14 @@ Model weights are built once per architecture and shared across the
 variants (and, via ``model_cache``, across the cluster's workers); each
 variant still gets its own engine so slot state never crosses variants.
 Engines are warmed up at creation, keeping XLA compile time out of the
-measured service times.
+measured service times. With ``max_engines`` set, the per-variant engine
+map is an LRU: the least-recently-run variant's engine is dropped when the
+cap is hit (engines are idle between ``run()`` calls, so nothing in flight
+is lost) and rebuilds lazily — warmup happens at rebuild, outside the
+measured window — keeping multi-arch ``backend="real"`` clusters
+host-sized. ``page_size``/``n_pages``/``chunk_threshold`` pass through to
+the engines: the paged KV data plane and chunked prefill under the full
+INFaaS control plane.
 """
 from __future__ import annotations
 
@@ -64,6 +71,10 @@ class EngineExecutorConfig:
     refit_min_points: int = 2   # distinct batch sizes before an m,c refit
     obs_window: int = 32        # measurements kept per (variant, batch)
     seed: int = 0
+    page_size: Optional[int] = None   # paged KV cache (None = contiguous)
+    n_pages: Optional[int] = None     # pool size (None = slot parity)
+    chunk_threshold: Optional[int] = None  # chunked prefill past this len
+    max_engines: Optional[int] = None  # LRU cap on live engines (None = off)
 
 
 class EngineExecutor:
@@ -84,6 +95,7 @@ class EngineExecutor:
         # per job and memory stays flat in a long-running cluster
         self.observations: Dict[str, Dict[int, Deque[float]]] = {}
         self.refits: Dict[str, int] = {}                 # refit count
+        self.evictions = 0                               # LRU engine drops
         self._models = model_cache if model_cache is not None else {}
         self._rid = itertools.count()
 
@@ -101,18 +113,39 @@ class EngineExecutor:
         return entry
 
     def _engine(self, variant: Variant) -> ServingEngine:
-        eng = self.engines.get(variant.name)
+        eng = self.engines.pop(variant.name, None)
         if eng is None:
+            if self.cfg.max_engines is not None:
+                # LRU cap: multi-arch real clusters stay host-sized.
+                # Engines are idle between run() calls, so eviction never
+                # drops in-flight state; an evicted variant rebuilds
+                # lazily here and re-warms before the measured window.
+                while len(self.engines) >= max(self.cfg.max_engines, 1):
+                    victim = next(iter(self.engines))
+                    del self.engines[victim]
+                    self.evictions += 1
             model, params = self._model(variant.arch)
+            kwargs = {}
+            # xLSTM has no attention KV to page and chunked prefill is
+            # engine-gated per family (the engine clamps both knobs
+            # itself); audio rejects paging outright, so a mixed-arch
+            # cluster falls back to contiguous there
+            if self.cfg.page_size is not None and \
+                    model.cfg.family != "audio":
+                kwargs.update(page_size=self.cfg.page_size,
+                              n_pages=self.cfg.n_pages)
             eng = ServingEngine(
                 model, params,
                 max_batch=min(self.cfg.max_batch,
                               max(variant.profile.max_batch, 1)),
                 max_len=self.cfg.max_len,
                 decode_block=self.cfg.decode_block,
-                min_bucket=self.cfg.min_bucket)
+                min_bucket=self.cfg.min_bucket,
+                chunk_threshold=self.cfg.chunk_threshold,
+                **kwargs)
             eng.warmup(prompt_lens=[self.cfg.prompt_len])
-            self.engines[variant.name] = eng
+        # dict order doubles as the LRU list: reinsert on every access
+        self.engines[variant.name] = eng
         return eng
 
     # ------------------------------------------------------------------

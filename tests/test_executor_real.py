@@ -308,3 +308,59 @@ def test_payload_runs_do_not_refit_profiles():
     assert v.name not in ex.observations          # payload run: excluded
     ex.run(v, 2, [ExecRequest(n_inputs=2)])
     assert list(ex.observations[v.name]) == [2]   # synthetic run: recorded
+
+
+@slow
+def test_engine_executor_lru_eviction_caps_engines():
+    """ISSUE 4 satellite: with ``max_engines`` set the per-variant engine
+    map is an LRU — building past the cap evicts the least-recently-used
+    engine, an evicted variant rebuilds lazily (and re-warms outside the
+    measured window), and outputs stay correct after the round trip."""
+    from repro.core import profiler as prof
+    from repro.core.worker import ExecRequest
+    from repro.serving.executor import EngineExecutor, EngineExecutorConfig
+
+    ex = EngineExecutor({LLAMA.name: LLAMA.reduced()},
+                        EngineExecutorConfig(max_engines=2, max_batch=2,
+                                             max_len=16, decode_block=2,
+                                             min_bucket=4, prompt_len=4,
+                                             max_new=2))
+    v1, v2, v3 = list(prof.generate_variants(LLAMA))[:3]
+    ex.run(v1, 1)
+    ex.run(v2, 1)
+    assert set(ex.engines) == {v1.name, v2.name} and ex.evictions == 0
+    ex.run(v3, 1)                       # v1 is the LRU victim
+    assert set(ex.engines) == {v2.name, v3.name}
+    assert ex.evictions == 1
+    # touching v2 marks it most-recent: the next build evicts v3, not v2
+    ex.run(v2, 1)
+    ex.run(v1, 1)                       # lazy rebuild of the evictee
+    assert set(ex.engines) == {v2.name, v1.name}
+    assert ex.evictions == 2
+    # rebuilt engine still serves real payloads correctly
+    outs = []
+    ex.run(v1, 1, [ExecRequest(n_inputs=1, prompts=((1, 2, 3),),
+                               max_new_tokens=2,
+                               on_outputs=outs.append)])
+    assert len(outs) == 1 and len(outs[0][0]) == 2
+
+
+@slow
+def test_engine_executor_paged_knobs_reach_engines():
+    """page_size / n_pages / chunk_threshold flow through the executor
+    into every lazily-built engine."""
+    from repro.core import profiler as prof
+    from repro.serving.executor import EngineExecutor, EngineExecutorConfig
+
+    ex = EngineExecutor({LLAMA.name: LLAMA.reduced()},
+                        EngineExecutorConfig(max_batch=2, max_len=16,
+                                             decode_block=2, min_bucket=4,
+                                             prompt_len=4, max_new=2,
+                                             page_size=8,
+                                             chunk_threshold=8))
+    v = next(iter(prof.generate_variants(LLAMA)))
+    ex.run(v, 1)
+    eng = ex.engines[v.name]
+    assert eng._paged and eng.page_size == 8
+    assert eng.chunk_threshold == 8
+    assert eng.n_pages == eng.max_batch * eng.max_len // 8

@@ -144,3 +144,49 @@ def test_decode_adapter_matches_model_layout():
     want = attention_core(q, k, v, causal=False, kv_valid_len=200, impl="xla")
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=2e-5, atol=2e-5)
+
+
+PAGED_DECODE_CASES = [
+    # (B, K, G, n_pages, page_size, pages_per_slot, D)
+    (2, 2, 4, 16, 64, 4, 64),
+    (3, 4, 1, 8, 128, 2, 64),
+    (1, 1, 8, 32, 32, 8, 128),    # MQA, fine pages
+]
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("case", PAGED_DECODE_CASES)
+def test_paged_decode_attention(case, dtype):
+    """Block-table kernel == gathering each slot's pages into a
+    contiguous cache and running the dense reference, including sentinel
+    block-table entries past the per-slot valid length."""
+    from repro.kernels.decode_attention import paged_decode_attention
+
+    B, K, G, n_pages, ps, P, D = case
+    rng = jax.random.PRNGKey(hash(case) % 2**31)
+    k1, k2, k3, k4, k5 = jax.random.split(rng, 5)
+    q = jax.random.normal(k1, (B, K, G, D), jnp.float32).astype(dtype)
+    k_pool = jax.random.normal(k2, (n_pages, ps, K, D),
+                               jnp.float32).astype(dtype)
+    v_pool = jax.random.normal(k3, (n_pages, ps, K, D),
+                               jnp.float32).astype(dtype)
+    # each slot draws distinct pages; entries past its allocation carry
+    # the sentinel n_pages (clamped by the kernel, masked by valid_len)
+    perm = jax.random.permutation(k4, n_pages)[: B * P].reshape(B, P)
+    valid = jax.random.randint(k5, (B,), 1, P * ps + 1)
+    n_alloc = -(-valid // ps)                      # pages actually held
+    bt = jnp.where(jnp.arange(P)[None, :] < n_alloc[:, None], perm,
+                   n_pages)
+    out = paged_decode_attention(q, k_pool, v_pool, bt, valid,
+                                 interpret=True)
+    # reference: gather pages (clamp sentinels) -> (B, K, T, D) dense
+    gathered_k = jnp.take(k_pool, jnp.clip(bt, 0, n_pages - 1), axis=0)
+    gathered_v = jnp.take(v_pool, jnp.clip(bt, 0, n_pages - 1), axis=0)
+    kc = gathered_k.reshape(B, P * ps, K, D).transpose(0, 2, 1, 3)
+    vc = gathered_v.reshape(B, P * ps, K, D).transpose(0, 2, 1, 3)
+    wants = [ref.decode_attention_ref(q[i:i + 1], kc[i:i + 1],
+                                      vc[i:i + 1], valid[i])
+             for i in range(B)]
+    want = jnp.concatenate(wants, axis=0)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), **tol(dtype))

@@ -37,3 +37,22 @@ def test_launch_real_engine_demo_smoke(capsys):
                 "--real-reqs", "4", "--real-slots", "2"])
     out = capsys.readouterr().out
     assert "real engine" in out and "tok/s" in out
+
+
+def test_launch_real_engine_demo_paged_smoke(capsys):
+    """The paged/chunked knobs reach the standalone engine demo."""
+    serve.main(["--real-engine", "--arch", "llama3.2-1b",
+                "--real-reqs", "4", "--real-slots", "2",
+                "--page-size", "8", "--chunk-threshold", "16"])
+    out = capsys.readouterr().out
+    assert "paged 16x8" in out and "tok/s" in out
+
+
+def test_launch_sim_backend_rejects_paged_flags():
+    """The paged/chunk knobs configure the real data plane; silently
+    ignoring them on the sim backend would misread sim results as
+    paged-engine behavior."""
+    with pytest.raises(SystemExit, match="real"):
+        serve.main(["--arch", "llama3.2-1b", "--page-size", "8"])
+    with pytest.raises(SystemExit, match="real"):
+        serve.main(["--arch", "llama3.2-1b", "--chunk-threshold", "16"])

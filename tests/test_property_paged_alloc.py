@@ -1,0 +1,91 @@
+"""Property-based tests (hypothesis) on the paged-KV page allocator.
+
+The ``PageAllocator`` is the host-side half of the paged serving engine:
+admission reserves a slot's worst-case page count, ``cover()`` hands out
+physical pages as the slot's position grows (chunked prefill grows in
+``decode_block``-sized strides), ``release()`` returns them at finish.
+Under arbitrary admit/grow/finish interleavings the pool must never
+double-book a page, must conserve ``free + live == n_pages``, and must
+return every page at drain.
+"""
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.serving.engine import PageAllocator
+
+# one op per event: (kind, a, b) drives admit / grow / finish against a
+# model of live slots kept in the test
+OPS = st.lists(
+    st.tuples(st.sampled_from(["admit", "grow", "finish"]),
+              st.integers(0, 2**31 - 1), st.integers(1, 96)),
+    min_size=1, max_size=80)
+
+
+def _invariants(alloc: PageAllocator):
+    live = alloc.live_pages()
+    assert len(live) == len(set(live)), "page referenced by two live slots"
+    assert all(0 <= p < alloc.n_pages for p in live)
+    assert alloc.n_free + len(live) == alloc.n_pages, \
+        "free-list + live pages != pool size"
+    assert alloc.committed <= alloc.n_pages
+
+
+@settings(max_examples=150, deadline=None)
+@given(OPS, st.integers(1, 48), st.integers(1, 16), st.integers(1, 16))
+def test_page_allocator_invariants(ops, n_pages, page_size, max_slots):
+    alloc = PageAllocator(n_pages, page_size)
+    live = {}                            # slot -> total positions (npos)
+    next_slot = 0
+    for kind, pick, npos in ops:
+        if kind == "admit":
+            if next_slot >= max_slots or \
+                    not alloc.can_reserve(npos):
+                continue
+            slot = next_slot
+            next_slot += 1
+            alloc.reserve(slot, npos)
+            live[slot] = npos
+            # prompt pages up front, like the engine's admit path
+            alloc.cover(slot, min(npos, page_size))
+        elif kind == "grow" and live:
+            slot = sorted(live)[pick % len(live)]
+            # chunked-prefill stride: cover some prefix, never past the
+            # reservation (cover clamps, as the engine relies on)
+            grown = alloc.cover(slot, npos)
+            assert len(alloc.pages_of(slot)) <= \
+                alloc.pages_needed(live[slot])
+            assert len(grown) == len(set(grown))
+        elif kind == "finish" and live:
+            slot = sorted(live)[pick % len(live)]
+            pages = alloc.release(slot)
+            del live[slot]
+            assert len(pages) == len(set(pages))
+        _invariants(alloc)
+    # drain: every page returns to the free list
+    for slot in sorted(live):
+        alloc.release(slot)
+        _invariants(alloc)
+    assert alloc.n_free == alloc.n_pages
+    assert alloc.committed == 0
+
+
+@given(st.integers(1, 64), st.integers(1, 32), st.integers(0, 2048))
+def test_pages_needed_is_exact_ceiling(n_pages, page_size, npos):
+    alloc = PageAllocator(n_pages, page_size)
+    need = alloc.pages_needed(npos)
+    assert need * page_size >= npos
+    assert (need - 1) * page_size < npos or need == 0
+
+
+@given(st.integers(1, 32), st.integers(1, 8))
+def test_reservation_gates_admission(n_pages, page_size):
+    """Admitting exactly to capacity succeeds; one page more is refused."""
+    alloc = PageAllocator(n_pages, page_size)
+    for slot in range(n_pages):
+        assert alloc.can_reserve(page_size)
+        alloc.reserve(slot, page_size)
+    assert not alloc.can_reserve(1)
+    with pytest.raises(ValueError):
+        alloc.reserve(n_pages + 1, 1)
