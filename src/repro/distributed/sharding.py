@@ -230,7 +230,9 @@ def cache_specs(cfg: ArchConfig, batch: int, ax: MeshAxes) -> Any:
         return {"k": kv, "v": kv}
     if fam == "audio":
         kv = _kv_spec(cfg, ax, batch)
-        return {"k": kv, "v": kv, "xk": kv, "xv": kv}
+        # enc_len: per-sequence true encoder length (B,) — batch-sharded
+        return {"k": kv, "v": kv, "xk": kv, "xv": kv,
+                "enc_len": P(_dax(ax, batch))}
     if fam == "vlm":
         kv = _kv_spec(cfg, ax, batch, n_lead=2)
         # image-token dim (1601) does not divide the mesh: shard KV heads if

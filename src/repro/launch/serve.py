@@ -34,7 +34,8 @@ from benchmarks.common import steady_metrics  # noqa: E402
 def _real_engine_demo(arch: str, n_reqs: int, slots: int,
                       page_size: Optional[int] = None,
                       n_pages: Optional[int] = None,
-                      chunk_threshold: Optional[int] = None) -> None:
+                      chunk_threshold: Optional[int] = None,
+                      stage_slots: int = 0) -> None:
     import time
 
     import jax
@@ -48,7 +49,8 @@ def _real_engine_demo(arch: str, n_reqs: int, slots: int,
     params = model.init(jax.random.PRNGKey(0))
     eng = ServingEngine(model, params, max_batch=slots, max_len=64,
                         decode_block=16, page_size=page_size,
-                        n_pages=n_pages, chunk_threshold=chunk_threshold)
+                        n_pages=n_pages, chunk_threshold=chunk_threshold,
+                        stage_slots=stage_slots)
     rng = np.random.default_rng(0)
     reqs = [Request(rid=i,
                     prompt=rng.integers(0, cfg.vocab,
@@ -70,7 +72,9 @@ def _real_engine_demo(arch: str, n_reqs: int, slots: int,
           f"({s['prefill_dispatches']}+{s['decode_dispatches']} dispatches, "
           f"{s['prefill_traces']}+{s['decode_traces']} compiles, "
           f"peak {s['peak_concurrency']} slots, "
-          f"{s['chunk_admits']} chunked admits)")
+          f"{s['chunk_admits']} chunked admits, "
+          f"{s['inseg_admissions']} in-segment admits, "
+          f"segment occupancy {eng.occupancy['slot_busy_frac']:.2f})")
 
 
 def main(argv: Optional[Sequence[str]] = None) -> None:
@@ -102,21 +106,30 @@ def main(argv: Optional[Sequence[str]] = None) -> None:
     ap.add_argument("--chunk-threshold", type=int, default=None,
                     help="chunk prompts longer than this through the "
                          "decode loop instead of one prefill dispatch")
+    ap.add_argument("--stage-slots", type=int, default=0,
+                    help="in-segment admission: device staging ring "
+                         "capacity (0 = boundary-only admission)")
     args = ap.parse_args(argv)
 
+    if args.n_pages is not None and args.page_size is None:
+        raise SystemExit("--n-pages sizes the paged KV pool; it needs "
+                         "--page-size (contiguous engines have no pool)")
     if args.real_engine:
         _real_engine_demo(args.arch, args.real_reqs, args.real_slots,
                           page_size=args.page_size, n_pages=args.n_pages,
-                          chunk_threshold=args.chunk_threshold)
+                          chunk_threshold=args.chunk_threshold,
+                          stage_slots=args.stage_slots)
         return
 
     if args.backend != "real" and (args.page_size is not None
                                    or args.n_pages is not None
-                                   or args.chunk_threshold is not None):
+                                   or args.chunk_threshold is not None
+                                   or args.stage_slots):
         raise SystemExit(
-            "--page-size/--n-pages/--chunk-threshold configure the real "
-            "data plane; combine them with --backend real or "
-            "--real-engine (the sim backend has no KV cache to page)")
+            "--page-size/--n-pages/--chunk-threshold/--stage-slots "
+            "configure the real data plane; combine them with --backend "
+            "real or --real-engine (the sim backend has no KV cache to "
+            "page and no decode loop to refill)")
     if args.backend == "real" and args.arch == "all":
         raise SystemExit("--backend real needs a single --arch "
                          "(each arch builds real model params)")
@@ -125,11 +138,14 @@ def main(argv: Optional[Sequence[str]] = None) -> None:
     cfg = MasterConfig(hedge_enabled=args.hedge)
     engine_cfg = None
     if args.backend == "real" and (args.page_size is not None
-                                   or args.chunk_threshold is not None):
+                                   or args.n_pages is not None
+                                   or args.chunk_threshold is not None
+                                   or args.stage_slots):
         from repro.serving.executor import EngineExecutorConfig
         engine_cfg = EngineExecutorConfig(
             page_size=args.page_size, n_pages=args.n_pages,
-            chunk_threshold=args.chunk_threshold)
+            chunk_threshold=args.chunk_threshold,
+            stage_slots=args.stage_slots)
     c = make_cluster(n_accel=args.workers, n_cpu=args.cpu_workers,
                      archs=archs, autoscale=not args.no_autoscale, cfg=cfg,
                      backend=args.backend, engine_cfg=engine_cfg)

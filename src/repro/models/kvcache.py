@@ -100,6 +100,26 @@ def paged_update_layer_cache(k_pool: jax.Array, v_pool: jax.Array,
     return k_pool, v_pool
 
 
+def reset_slot_rows(leaf: jax.Array, batch_axis: int, take: jax.Array,
+                    empty_row: jax.Array) -> jax.Array:
+    """Replace the batch rows of a slot-indexed state leaf selected by
+    ``take`` (B,) bool with ``empty_row`` (the leaf's 1-row empty state,
+    batch axis leading).
+
+    This is the in-segment slot-reset primitive: when the serving engine's
+    fused decode loop pulls a staged request into a freed slot, the slot's
+    O(1) recurrent-state rows (SSM/conv/xLSTM cells) must restart from the
+    family's empty state *inside* the traced loop body. Attention KV leaves
+    need no reset — a position is always rewritten by its new occupant
+    before any masked read can include it — so callers skip leaves that
+    carry a sequence axis.
+    """
+    arr = jnp.moveaxis(leaf, batch_axis, 0)
+    cond = take.reshape((-1,) + (1,) * (arr.ndim - 1))
+    arr = jnp.where(cond, empty_row.astype(arr.dtype), arr)
+    return jnp.moveaxis(arr, 0, batch_axis)
+
+
 def gather_block_kv(pool: jax.Array, block_table: jax.Array) -> jax.Array:
     """Materialize each slot's logical KV view from the shared pool.
 

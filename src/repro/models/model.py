@@ -22,12 +22,18 @@ Serving extensions (used by the continuous-batching engine):
     case the attention k/v leaves are shared page pools
     (``repro.models.kvcache`` paged layout) and writes/reads route through
     the slot's block table; recurrent O(1) state leaves stay slot-indexed.
-    Supported by the dense/moe/hybrid/vlm decode paths.
+    Supported by the dense/moe/hybrid/vlm/audio decode paths (audio
+    carries its true encoder length per slot as an ``enc_len`` cache leaf
+    and masks cross-attention by it).
+  * ``empty_state(batch, max_len)`` returns the decode cache of a
+    sequence that has seen no tokens — the slot-reset seam the serving
+    engine uses for chunked prefill and in-segment admission (all-zeros
+    except xLSTM's -inf stabilizers).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict
+from typing import Any, Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -50,10 +56,23 @@ class Model:
     prefill: Callable[..., Any]
     decode: Callable[..., Any]
     cache_shapes: Callable[..., Any]
+    # empty_state(batch, max_len, **kw) -> concrete cache pytree for a
+    # sequence that has seen no tokens: the slot-reset seam the serving
+    # engine uses for chunked prefill and in-segment admission. Defaults
+    # to all-zeros (valid for attention KV and SSM/conv states); xLSTM
+    # overrides it (its sLSTM/mLSTM stabilizers start at -inf, not zero).
+    empty_state: Optional[Callable[..., Any]] = None
 
     def loss(self, params, batch: Batch) -> jax.Array:
         logits = self.forward(params, batch)
         return L.cross_entropy(logits, batch["targets"])
+
+
+def _zeros_empty_state(cache_shapes: Callable[..., Any]):
+    def empty_state(batch: int, max_len: int, **kw):
+        shapes = cache_shapes(batch, max_len, **kw)
+        return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), shapes)
+    return empty_state
 
 
 def _attn_cache_shapes(cfg: ArchConfig, n_layers: int, batch: int,
@@ -68,6 +87,8 @@ def build_model(cfg: ArchConfig, parallel=None) -> Model:
     fam = cfg.family
 
     if fam in ("dense",):
+        cs = lambda batch, max_len, **kw: _attn_cache_shapes(  # noqa: E731
+            cfg, cfg.n_layers, batch, max_len)
         return Model(
             cfg=cfg,
             init=lambda rng: T.init_dense(cfg, rng),
@@ -75,11 +96,13 @@ def build_model(cfg: ArchConfig, parallel=None) -> Model:
             prefill=lambda p, b: T.prefill_dense(cfg, p, b["tokens"],
                                                  length=b.get("length")),
             decode=lambda p, c, t, pos: T.decode_dense(cfg, p, c, t, pos),
-            cache_shapes=lambda batch, max_len, **kw: _attn_cache_shapes(
-                cfg, cfg.n_layers, batch, max_len),
+            cache_shapes=cs,
+            empty_state=_zeros_empty_state(cs),
         )
 
     if fam == "moe":
+        cs = lambda batch, max_len, **kw: _attn_cache_shapes(  # noqa: E731
+            cfg, cfg.n_layers, batch, max_len)
         return Model(
             cfg=cfg,
             init=lambda rng: M.init_moe(cfg, rng),
@@ -88,11 +111,13 @@ def build_model(cfg: ArchConfig, parallel=None) -> Model:
                                                length=b.get("length")),
             decode=lambda p, c, t, pos: M.decode_moe(cfg, p, c, t, pos,
                                                      parallel),
-            cache_shapes=lambda batch, max_len, **kw: _attn_cache_shapes(
-                cfg, cfg.n_layers, batch, max_len),
+            cache_shapes=cs,
+            empty_state=_zeros_empty_state(cs),
         )
 
     if fam == "hybrid":
+        cs = lambda batch, max_len, **kw: S.zamba_cache_shapes(  # noqa: E731
+            cfg, batch, max_len)
         return Model(
             cfg=cfg,
             init=lambda rng: S.init_zamba(cfg, rng),
@@ -100,8 +125,8 @@ def build_model(cfg: ArchConfig, parallel=None) -> Model:
             prefill=lambda p, b: S.prefill_zamba(cfg, p, b["tokens"],
                                                  length=b.get("length")),
             decode=lambda p, c, t, pos: S.decode_zamba(cfg, p, c, t, pos),
-            cache_shapes=lambda batch, max_len, **kw: S.zamba_cache_shapes(
-                cfg, batch, max_len),
+            cache_shapes=cs,
+            empty_state=_zeros_empty_state(cs),
         )
 
     if fam == "ssm":
@@ -114,6 +139,8 @@ def build_model(cfg: ArchConfig, parallel=None) -> Model:
             decode=lambda p, c, t, pos: X.decode_xlstm(cfg, p, c, t, pos),
             cache_shapes=lambda batch, max_len, **kw: X.xlstm_cache_shapes(
                 cfg, batch, max_len),
+            empty_state=lambda batch, max_len, **kw: X.xlstm_empty_state(
+                cfg, batch),
         )
 
     if fam == "audio":
@@ -124,6 +151,10 @@ def build_model(cfg: ArchConfig, parallel=None) -> Model:
             dtype = jnp.dtype(cfg.dtype)
             c["xk"] = jax.ShapeDtypeStruct(xsh, dtype)
             c["xv"] = jax.ShapeDtypeStruct(xsh, dtype)
+            # per-sequence true encoder length: cross-attention masks
+            # padded encoder rows by it (a batch-indexed state leaf, so
+            # the serving engine threads it per slot like any O(1) state)
+            c["enc_len"] = jax.ShapeDtypeStruct((batch,), jnp.int32)
             return c
         return Model(
             cfg=cfg,
@@ -135,6 +166,7 @@ def build_model(cfg: ArchConfig, parallel=None) -> Model:
                                                  length=b.get("length")),
             decode=lambda p, c, t, pos: T.decode_audio(cfg, p, c, t, pos),
             cache_shapes=cache_shapes,
+            empty_state=_zeros_empty_state(cache_shapes),
         )
 
     if fam == "vlm":
@@ -151,6 +183,7 @@ def build_model(cfg: ArchConfig, parallel=None) -> Model:
                     "v": jax.ShapeDtypeStruct(sh, dtype),
                     "xk": jax.ShapeDtypeStruct(xsh, dtype),
                     "xv": jax.ShapeDtypeStruct(xsh, dtype)}
+        vlm_cs = cache_shapes
         return Model(
             cfg=cfg,
             init=lambda rng: T.init_vlm(cfg, rng),
@@ -160,7 +193,8 @@ def build_model(cfg: ArchConfig, parallel=None) -> Model:
                                                b["image_embeds"],
                                                length=b.get("length")),
             decode=lambda p, c, t, pos: T.decode_vlm(cfg, p, c, t, pos),
-            cache_shapes=cache_shapes,
+            cache_shapes=vlm_cs,
+            empty_state=_zeros_empty_state(vlm_cs),
         )
 
     raise ValueError(f"unknown family {fam!r}")

@@ -102,7 +102,7 @@ def init_audio(cfg: ArchConfig, rng) -> Params:
 
 
 def _self_block(x, blk, cfg: ArchConfig, *, causal=True, positions=None,
-                rope=True):
+                rope=True, kv_valid_len=None):
     h = L.rmsnorm(x, blk["ln1"])
     q, k, v = L.attn_qkv(h, blk["attn"])
     if positions is None:
@@ -110,19 +110,24 @@ def _self_block(x, blk, cfg: ArchConfig, *, causal=True, positions=None,
     if rope:
         q = L.apply_rope(q, positions, cfg.rope_theta)
         k = L.apply_rope(k, positions, cfg.rope_theta)
-    o = L.attention_core(q, k, v, causal=causal, impl=cfg.attention_impl)
+    o = L.attention_core(q, k, v, causal=causal, kv_valid_len=kv_valid_len,
+                         impl=cfg.attention_impl)
     x = x + L.attn_out(o, blk["attn"])
     x = x + L.swiglu(L.rmsnorm(x, blk["ln2"]), blk["mlp"])
     return L.constrain_residual(x)
 
 
-def _cross_block(x, blk, ctx, cfg: ArchConfig):
-    """Cross-attention block: queries from x, KV from ctx (no RoPE/causality)."""
+def _cross_block(x, blk, ctx, cfg: ArchConfig, valid_len=None):
+    """Cross-attention block: queries from x, KV from ctx (no RoPE/causality).
+
+    ``valid_len``: optional scalar or (B,) true context lengths; padded
+    context rows mask out of the softmax (exact zeros)."""
     h = L.rmsnorm(x, blk["ln1"])
     q = jnp.einsum("bsd,dkgh->bskgh", h, blk["attn"]["wq"])
     k = jnp.einsum("btd,dkh->btkh", ctx, blk["attn"]["wk"])
     v = jnp.einsum("btd,dkh->btkh", ctx, blk["attn"]["wv"])
-    o = L.attention_core(q, k, v, causal=False, impl=cfg.attention_impl)
+    o = L.attention_core(q, k, v, causal=False, kv_valid_len=valid_len,
+                         impl=cfg.attention_impl)
     x = x + L.attn_out(o, blk["attn"])
     x = x + L.swiglu(L.rmsnorm(x, blk["ln2"]), blk["mlp"])
     return L.constrain_residual(x)
@@ -133,10 +138,11 @@ def _maybe_remat(fn, cfg: ArchConfig):
 
 
 def _scan_blocks(x, stack: Params, cfg: ArchConfig, *, causal=True,
-                 positions=None, rope=True):
+                 positions=None, rope=True, kv_valid_len=None):
     def body(carry, blk):
         return _self_block(carry, blk, cfg, causal=causal,
-                           positions=positions, rope=rope), None
+                           positions=positions, rope=rope,
+                           kv_valid_len=kv_valid_len), None
     x, _ = lax.scan(_maybe_remat(body, cfg), x, stack)
     return x
 
@@ -371,10 +377,16 @@ def decode_vlm(cfg: ArchConfig, params: Params, cache, token: jax.Array, pos):
 # audio (enc-dec): stub frame embeddings in, decoder tokens out
 
 
-def _encode(cfg: ArchConfig, params: Params, frames: jax.Array) -> jax.Array:
-    """frames: (B, T, d_model) precomputed stub embeddings."""
+def _encode(cfg: ArchConfig, params: Params, frames: jax.Array,
+            valid_len=None) -> jax.Array:
+    """frames: (B, T, d_model) precomputed stub embeddings.
+
+    ``valid_len``: optional (B,) true frame counts for right-padded frame
+    batches; padded rows are masked out of the (bidirectional) encoder
+    self-attention so valid encoder outputs are independent of padding."""
     x = frames.astype(jnp.dtype(cfg.dtype))
-    return _scan_blocks(x, params["encoder"], cfg, causal=False)
+    return _scan_blocks(x, params["encoder"], cfg, causal=False,
+                        kv_valid_len=valid_len)
 
 
 def forward_audio(cfg: ArchConfig, params: Params, tokens: jax.Array,
@@ -397,10 +409,19 @@ def forward_audio(cfg: ArchConfig, params: Params, tokens: jax.Array,
 
 def prefill_audio(cfg: ArchConfig, params: Params, tokens: jax.Array,
                   frames: jax.Array, length: Optional[jax.Array] = None):
+    """``length``: optional (B,) valid prefix lengths, shared by the token
+    prompt and the frame stream. Encoder self-attention and decoder cross-
+    attention both mask by the true encoder length, so padded encoder rows
+    contribute exact zeros — outputs no longer depend on the padded width,
+    and the paged cache's dropped writes on padding rows are unobservable.
+    The true length rides in the cache (``enc_len``) for decode."""
     dtype = jnp.dtype(cfg.dtype)
-    enc = _encode(cfg, params, frames)
+    enc = _encode(cfg, params, frames, valid_len=length)
     B, S = tokens.shape
     positions = jnp.arange(S)[None, :]
+    enc_len = length if length is not None \
+        else jnp.full((B,), frames.shape[1], jnp.int32)
+    enc_len = enc_len.astype(jnp.int32)
     x = L.embed_tokens(tokens, params["embed"], dtype)
 
     def body(carry, xs):
@@ -416,26 +437,36 @@ def prefill_audio(cfg: ArchConfig, params: Params, tokens: jax.Array,
                              dec_blk["mlp"]))
         xk = jnp.einsum("btd,dkh->btkh", enc, cross_blk["attn"]["wk"])
         xv = jnp.einsum("btd,dkh->btkh", enc, cross_blk["attn"]["wv"])
-        carry = _cross_block(carry, cross_blk, enc, cfg)
+        carry = _cross_block(carry, cross_blk, enc, cfg, valid_len=length)
         return carry, (k, v, xk, xv)
 
     x, (ks, vs, xks, xvs) = lax.scan(body, x,
                                      (params["decoder"], params["cross"]))
     x = L.rmsnorm(x, params["ln_f"])
     logits = L.lm_logits(L.select_last(x, length), params["head"])
-    return logits, {"k": ks, "v": vs, "xk": xks, "xv": xvs}
+    return logits, {"k": ks, "v": vs, "xk": xks, "xv": xvs,
+                    "enc_len": enc_len}
 
 
 def decode_audio(cfg: ArchConfig, params: Params, cache, token: jax.Array, pos):
     dtype = jnp.dtype(cfg.dtype)
+    bt = cache.get("bt")
+    enc_len = cache["enc_len"]
     x = L.embed_tokens(token, params["embed"], dtype)
 
     def body(carry, xs):
         dec_blk, cross_blk, kc, vc, xk, xv = xs
-        carry, kc, vc = _decode_block(carry, dec_blk, kc, vc, pos, cfg)
+        carry, kc, vc = _decode_block(carry, dec_blk, kc, vc, pos, cfg,
+                                      bt=bt)
         h = L.rmsnorm(carry, cross_blk["ln1"])
         q = jnp.einsum("bsd,dkgh->bskgh", h, cross_blk["attn"]["wq"])
-        o = L.attention_core(q, xk, xv, causal=False, impl=cfg.attention_impl)
+        if bt is None:
+            o = L.attention_core(q, xk, xv, causal=False,
+                                 kv_valid_len=enc_len,
+                                 impl=cfg.attention_impl)
+        else:
+            o = L.paged_attention_core(q, xk, xv, bt, kv_valid_len=enc_len,
+                                       impl=cfg.attention_impl)
         carry = carry + L.attn_out(o, cross_blk["attn"])
         carry = carry + L.swiglu(L.rmsnorm(carry, cross_blk["ln2"]),
                                  cross_blk["mlp"])
@@ -446,4 +477,8 @@ def decode_audio(cfg: ArchConfig, params: Params, cache, token: jax.Array, pos):
                                      cache["xk"], cache["xv"]))
     x = L.rmsnorm(x, params["ln_f"])
     logits = L.lm_logits(x, params["head"])
-    return logits, {"k": ks, "v": vs, "xk": cache["xk"], "xv": cache["xv"]}
+    out_cache = {"k": ks, "v": vs, "xk": cache["xk"], "xv": cache["xv"],
+                 "enc_len": enc_len}
+    if bt is not None:
+        out_cache["bt"] = bt
+    return logits, out_cache

@@ -416,6 +416,32 @@ def decode_xlstm(cfg: ArchConfig, params: Params, cache, token: jax.Array,
     return logits, cache
 
 
+def xlstm_empty_state(cfg: ArchConfig, batch: int) -> Dict[str, jax.Array]:
+    """The decode cache of a sequence that has seen no tokens yet.
+
+    xLSTM's empty state is NOT all-zeros: the mLSTM and sLSTM stabilizers
+    ``mm``/``sm`` start at -1e30 (so the first real token's gates dominate
+    exactly as in ``mlstm_recurrent``/``slstm_scan`` with ``state=None``)
+    and the sLSTM normalizer ``sn`` starts at the same 1e-6 floor the scan
+    initializes with. This is the slot-reset seam the serving engine uses
+    for chunked prefill and in-segment admission: decoding from this state
+    is bit-identical to decoding from scratch.
+    """
+    g, m_per = xlstm_groups(cfg)
+    n_m = g * m_per
+    d, H, hd = cfg.d_model, cfg.n_heads, cfg.head_dim
+    f32 = jnp.float32
+    return {
+        "mC": jnp.zeros((n_m, batch, H, hd, hd), f32),
+        "mn": jnp.zeros((n_m, batch, H, hd), f32),
+        "mm": jnp.full((n_m, batch, H), -1e30, f32),
+        "sh": jnp.zeros((g, batch, d), f32),
+        "sc": jnp.zeros((g, batch, d), f32),
+        "sn": jnp.full((g, batch, d), 1e-6, f32),
+        "sm": jnp.full((g, batch, d), -1e30, f32),
+    }
+
+
 def xlstm_cache_shapes(cfg: ArchConfig, batch: int, max_len: int):
     del max_len  # state size is independent of context length
     g, m_per = xlstm_groups(cfg)

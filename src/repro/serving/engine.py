@@ -67,13 +67,48 @@ each segment consumes up to ``decode_block`` prompt tokens for that slot
 switching to greedy emission) while other slots keep generating in the
 same dispatch. A near-``max_len`` prompt admitted mid-stream therefore
 delays in-flight decodes by zero extra dispatches. Chunked admission is
-enabled for the dense/hybrid families (their zero-initialized slot state
-is a valid empty decode state); audio/vlm need encoder KV from prefill,
-xLSTM's empty state is not all-zeros, and MoE's expert-capacity keep/drop
-decisions depend on the co-batched token set (prompt tokens fed inside
-the shared decode batch would diverge from the solo prefill the engine
-guarantees), so those families admit whole prompts regardless of the
-knob.
+enabled for the dense/hybrid/ssm families — each slot restarts from the
+family's empty decode state via ``Model.empty_state`` (all-zeros, except
+xLSTM's -inf stabilizers). Audio/vlm need encoder KV from prefill, and
+MoE's expert-capacity keep/drop decisions depend on the co-batched token
+set (prompt tokens fed inside the shared decode batch would diverge from
+the solo prefill the engine guarantees), so those families admit whole
+prompts regardless of the knob.
+
+**In-segment admission (staging ring).** Even with chunked prefill, a slot
+that finishes mid-segment idles until the ``lax.while_loop`` exits, and a
+newly arrived request waits for the next ``step()`` boundary — the
+occupancy bubble that inflates tail latency under bursty short-request
+load. With ``stage_slots=N`` the engine keeps a device-resident staging
+ring of up to ``N`` pending requests (prompt rows, lengths, ``max_new``,
+and — in paged mode — pre-reserved block-table rows): the decode loop's
+carry tracks a ring head, and the moment a slot's ``rem`` hits zero
+mid-segment the loop records the completion in a per-slot completion log
+and pulls the next staged request into the freed slot — resetting
+``pos``/``rem``/``plen``/prompt-buffer pointers, restoring the slot's O(1)
+recurrent-state rows to the family's empty state
+(``Model.empty_state`` — xLSTM's stabilizers start at -inf, not zero),
+and switching the slot to the staged request's block-table row. One
+dispatch can therefore retire *multiple* requests per slot with zero
+extra dispatches or host syncs; the host decodes the completion log after
+the segment to split each slot's emission row between its successive
+occupants. Staged requests teacher-force their prompts through the fused
+segment exactly like chunked prefill, so in-segment admission is gated to
+the same families whose teacher-forced decode is exact from the empty
+state (dense/hybrid/ssm); other families clamp ``stage_slots`` to 0 and
+keep boundary-only admission. In paged mode a staged request holds its
+worst-case page reservation from staging time (its first
+``decode_block`` positions' pages are materialized up front, since no
+host boundary can top it up mid-segment); ``PageAllocator`` tracks these
+staged reservations under per-request tickets that are re-keyed to the
+slot at harvest.
+
+**Occupancy accounting.** ``stats`` tracks ``busy_slot_steps`` /
+``bubble_slot_steps`` (active vs idle slot-steps inside fused segments,
+counted in the loop carry), ``inseg_admissions`` and ``staged``; the
+``occupancy`` property derives the per-segment slot-busy fraction and
+admissions-per-segment that ``EngineExecutor`` threads into its
+decision log.
 
 **Open-loop core.** The engine is step-driven: state (slot occupancy,
 pending queue, per-slot generations) persists on the engine, and the three
@@ -103,9 +138,12 @@ a static function of the padded token count — crosses a boundary between
 the prompt's bucket and its exact length and flips a token-drop decision
 (see ``prefill_moe``); MoE prompts are therefore admitted one per
 dispatch, which keeps decode exact and confines the effect to prefill.
-The audio family inherits the seed's unmasked cross-attention over
-zero-padded encoder KV, so its outputs depend on the engine's ``max_len``
-exactly as they depended on the seed's ``pad_to``.
+The audio family masks its encoder self-attention and decoder
+cross-attention by each request's true encoder length (threaded through
+the cache as a per-slot ``enc_len``), so padded encoder rows contribute
+exact zeros: audio outputs are padding-independent, and the paged layout
+(whose dropped writes leave padding rows stale) is bit-identical to
+contiguous for audio too.
 
 The seed wave engine survives as ``WaveEngine`` — the benchmark baseline
 for ``benchmarks/fig_engine_throughput.py``.
@@ -123,6 +161,7 @@ import numpy as np
 from jax import lax
 
 from repro.configs.base import ArchConfig
+from repro.models import kvcache as KV
 from repro.models.model import Model, build_model
 
 
@@ -134,6 +173,9 @@ class Request:
     arrival: float = 0.0
     tokens: Optional[np.ndarray] = None
     latency: float = 0.0
+    # wall time the request entered a device slot (prefill, chunked, or
+    # in-segment promotion at harvest); admitted - arrival is queue delay
+    admitted: float = -1.0
 
 
 def bucket_len(n: int, minimum: int = 8, maximum: Optional[int] = None) -> int:
@@ -149,13 +191,17 @@ def bucket_len(n: int, minimum: int = 8, maximum: Optional[int] = None) -> int:
 class PageAllocator:
     """Host-side accounting for the shared KV page pool.
 
-    Admission reserves a slot's worst case (``ceil(n_positions / page_size)``
-    pages for ``prompt_len + max_new - 1`` written positions) so a decode
-    can never strand mid-stream for lack of pages — ``cover()`` calls, which
-    lazily hand out physical pages as ``pos`` grows, always succeed within
-    the reservation. Invariants (pinned by the hypothesis property test):
-    no page is ever held by two live slots, ``free + live == n_pages`` at
-    all times, and a full drain returns every page to the free list.
+    Admission reserves a holder's worst case (``ceil(n_positions /
+    page_size)`` pages for ``prompt_len + max_new - 1`` written positions)
+    so a decode can never strand mid-stream for lack of pages — ``cover()``
+    calls, which lazily hand out physical pages as ``pos`` grows, always
+    succeed within the reservation. Holders are arbitrary hashable keys:
+    the engine keys live slots by slot index and staged-but-unadmitted
+    requests (in-segment admission) by per-request tickets, re-keyed to
+    the slot via ``rekey()`` when the staging ring promotes them.
+    Invariants (pinned by the hypothesis property test): no page is ever
+    held by two live holders, ``free + staged + live == n_pages`` at all
+    times, and a full drain returns every page to the free list.
     """
 
     def __init__(self, n_pages: int, page_size: int):
@@ -164,8 +210,8 @@ class PageAllocator:
         self.n_pages = n_pages
         self.page_size = page_size
         self._free: List[int] = list(range(n_pages))[::-1]
-        self._pages: Dict[int, List[int]] = {}     # slot -> held page ids
-        self._reserved: Dict[int, int] = {}        # slot -> worst-case pages
+        self._pages: Dict[Any, List[int]] = {}     # holder -> held page ids
+        self._reserved: Dict[Any, int] = {}        # holder -> worst case
 
     def pages_needed(self, n_positions: int) -> int:
         return max(0, -(-int(n_positions) // self.page_size))
@@ -217,6 +263,14 @@ class PageAllocator:
         self._free.extend(pages)
         return pages
 
+    def rekey(self, old: Any, new: Any) -> None:
+        """Transfer a reservation (and its held pages) to a new holder key:
+        a staged request's ticket becomes the slot it was pulled into."""
+        if new in self._reserved:
+            raise ValueError(f"holder {new!r} already live")
+        self._reserved[new] = self._reserved.pop(old)
+        self._pages[new] = self._pages.pop(old)
+
 
 class ServingEngine:
     """Continuous-batching engine over one model + params (greedy decode)."""
@@ -225,7 +279,8 @@ class ServingEngine:
                  max_len: int = 128, decode_block: int = 16,
                  min_bucket: int = 8, page_size: Optional[int] = None,
                  n_pages: Optional[int] = None,
-                 chunk_threshold: Optional[int] = None):
+                 chunk_threshold: Optional[int] = None,
+                 stage_slots: int = 0):
         self.model = model
         self.params = params
         self.max_batch = max_batch
@@ -236,22 +291,30 @@ class ServingEngine:
         # so grouped admission could change token-drop decisions vs a
         # serial run; admit MoE prompts one per dispatch to stay exact.
         self._group_admit = model.cfg.family != "moe"
-        # Chunked prefill teacher-forces the prompt through the decode
-        # path from a zero-initialized slot state; families whose empty
-        # state is not all-zeros (xLSTM's -inf stabilizers) or whose
-        # prefill computes encoder KV (audio/vlm) admit whole prompts.
-        # MoE is excluded too: its expert-capacity keep/drop decisions
-        # depend on the co-batched token set, so feeding prompt tokens
-        # inside the shared decode batch would diverge from the solo
-        # prefill the engine otherwise guarantees (see _group_admit).
-        self._chunk_ok = model.cfg.family in ("dense", "hybrid")
+        # Chunked prefill (and in-segment admission, which reuses the same
+        # teacher-forcing path) restarts a slot from the family's empty
+        # decode state (``Model.empty_state`` — all-zeros except xLSTM's
+        # -inf stabilizers). Families whose prefill computes encoder KV
+        # (audio/vlm) admit whole prompts. MoE is excluded too: its
+        # expert-capacity keep/drop decisions depend on the co-batched
+        # token set, so feeding prompt tokens inside the shared decode
+        # batch would diverge from the solo prefill the engine otherwise
+        # guarantees (see _group_admit).
+        self._chunk_ok = model.cfg.family in ("dense", "hybrid", "ssm")
         self.chunk_threshold = \
             chunk_threshold if self._chunk_ok else None
+        # in-segment admission: capacity of the device staging ring
+        # (0 = boundary-only admission); clamped off with chunking since
+        # staged prompts teacher-force through the decode segment
+        self.stage_slots = int(stage_slots) if self._chunk_ok and \
+            stage_slots else 0
         self.stats: Dict[str, int] = {
             "prefill_traces": 0, "decode_traces": 0, "chunk_traces": 0,
             "prefill_dispatches": 0, "decode_dispatches": 0,
             "decode_steps": 0, "tokens_generated": 0, "admitted": 0,
             "chunk_admits": 0, "peak_concurrency": 0,
+            "staged": 0, "inseg_admissions": 0,
+            "busy_slot_steps": 0, "bubble_slot_steps": 0,
         }
         shapes = model.cache_shapes(max_batch, max_len, enc_len=max_len)
         # Per-leaf batch axis, found by diffing cache shapes at two batch
@@ -274,11 +337,6 @@ class ServingEngine:
         # ----- paged layout -------------------------------------------
         self.page_size = page_size
         if page_size is not None:
-            if model.cfg.family == "audio":
-                raise ValueError(
-                    "paged KV unsupported for the audio family (its "
-                    "unmasked cross-attention reads padded encoder rows); "
-                    "use page_size=None")
             if max_len % page_size != 0:
                 raise ValueError(f"max_len {max_len} not a multiple of "
                                  f"page_size {page_size}")
@@ -311,6 +369,20 @@ class ServingEngine:
             self._cache = jax.tree.map(
                 lambda s: jnp.zeros(s.shape, s.dtype), shapes)
         self._paged = self._bt is not None
+        # Per-leaf empty-state rows (batch axis moved to front, batch=1):
+        # the slot-reset constant for chunked admission and the fused
+        # loop's in-segment refill. Sequence-carrying leaves never need a
+        # reset (their positions are rewritten before any masked read), so
+        # they get a dummy scalar the reset paths skip by seq axis.
+        if model.empty_state is not None:
+            empty1 = model.empty_state(1, max_len, enc_len=max_len)
+        else:
+            s1 = model.cache_shapes(1, max_len, enc_len=max_len)
+            empty1 = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), s1)
+        self._reset_rows = jax.tree.map(
+            lambda e, bax, sax: (jnp.moveaxis(jnp.asarray(e), bax, 0)
+                                 if sax == -1 else jnp.zeros((), e.dtype)),
+            empty1, self._batch_axes, self._seq_axes)
         self._tok = jnp.zeros((max_batch, 1), jnp.int32)
         self._pos = jnp.zeros((max_batch,), jnp.int32)
         self._rem = jnp.zeros((max_batch,), jnp.int32)
@@ -329,6 +401,11 @@ class ServingEngine:
         self._free: List[int] = list(range(max_batch))[::-1]
         self._slot_pos = np.zeros((max_batch,), np.int64)
         self._completed: List[Request] = []
+        # staging ring (in-segment admission): FIFO of
+        # (request, allocator ticket, block-table row) awaiting a freed
+        # slot inside a fused segment; mirrors the device ring each step
+        self._staged: deque = deque()
+        self._stage_seq = 0
 
     def _pool_shape(self, dims: Tuple[int, ...], bax: int, sax: int):
         """Contiguous leaf shape -> shared-pool shape: drop the batch axis,
@@ -429,24 +506,26 @@ class ServingEngine:
         if self._chunk_fn is not None:
             return self._chunk_fn
         baxes, saxes = self._batch_axes, self._seq_axes
+        reset_rows = self._reset_rows
+
+        n_slots = self.max_batch
 
         def chunk_admit(cache, tok, pos, rem, plen, pbuf, slot, row,
                         plen_v, max_new):
             # slot/plen_v/max_new: (1,); row: (1, max_len)
             self.stats["chunk_traces"] += 1
-
-            def zero_state(leaf, bax, sax):
-                # KV leaves need no reset: a position is always rewritten
-                # by this slot before any masked read can include it.
-                # O(1) state leaves carry the previous occupant's final
-                # state and must start from the empty (zero) state.
-                if sax != -1:
-                    return leaf
-                arr = jnp.moveaxis(leaf, bax, 0)
-                arr = arr.at[slot].set(jnp.zeros_like(arr[:1]))
-                return jnp.moveaxis(arr, 0, bax)
-
-            cache = jax.tree.map(zero_state, cache, baxes, saxes)
+            # KV leaves need no reset: a position is always rewritten by
+            # this slot before any masked read can include it. O(1) state
+            # leaves carry the previous occupant's final state and must
+            # restart from the family's empty state (zeros, except e.g.
+            # xLSTM's -inf stabilizers) — same primitive the fused loop's
+            # in-segment refill uses, with a one-hot slot mask.
+            take = jnp.arange(n_slots) == slot[0]
+            cache = jax.tree.map(
+                lambda leaf, bax, sax, empty_row:
+                    leaf if sax != -1
+                    else KV.reset_slot_rows(leaf, bax, take, empty_row),
+                cache, baxes, saxes, reset_rows)
             tok = tok.at[slot].set(row[:, :1])
             pos = pos.at[slot].set(jnp.zeros((1,), jnp.int32))
             rem = rem.at[slot].set(max_new)
@@ -462,19 +541,31 @@ class ServingEngine:
             return self._decode_fn
         model, steps, slots = self.model, self.decode_block, self.max_batch
         paged, max_len = self._paged, self.max_len
+        R = max(self.stage_slots, 1)      # device ring capacity (static)
+        max_comps = slots + R             # completion-log capacity
+        baxes, saxes = self._batch_axes, self._seq_axes
+        reset_rows = self._reset_rows
 
         def decode_segment(params, cache, tok, pos, rem, plen, pbuf,
-                           bt=None):
+                           ring_tok, ring_plen, ring_new, n_stage,
+                           bt=None, ring_bt=None):
+            # ring_tok: (R, max_len) staged prompt rows; ring_plen /
+            # ring_new: (R,) prompt lengths and max_new budgets; n_stage:
+            # scalar count of valid ring entries (0 disables refill);
+            # ring_bt: (R, pages_per_slot) pre-reserved block-table rows.
             self.stats["decode_traces"] += 1
+            slot_ids = jnp.arange(slots, dtype=jnp.int32)
 
             def cond(st):
-                i = st[0]
-                return (i < steps) & jnp.any(st[4] > 0)
+                return (st["i"] < steps) & jnp.any(st["rem"] > 0)
 
             def body(st):
-                i, cache, tok, pos, rem, out = st
+                i, cache = st["i"], st["cache"]
+                tok, pos, rem = st["tok"], st["pos"], st["rem"]
+                plen, pbuf = st["plen"], st["pbuf"]
+                bt_c = st.get("bt")
                 active = rem > 0
-                dcache = dict(cache, bt=bt) if paged else cache
+                dcache = dict(cache, bt=bt_c) if paged else cache
                 logits, dcache = model.decode(params, dcache, tok, pos)
                 if paged:
                     dcache = {k: v for k, v in dcache.items() if k != "bt"}
@@ -488,23 +579,78 @@ class ServingEngine:
                     axis=1)[:, 0]
                 nxt = jnp.where(feeding, pnext, nxt)
                 emit = jnp.where(active & ~feeding, nxt, -1)
-                out = lax.dynamic_update_slice(out, emit[:, None], (0, i))
+                out = lax.dynamic_update_slice(st["out"], emit[:, None],
+                                               (0, i))
                 tok = jnp.where(active[:, None], nxt[:, None], tok)
                 pos = jnp.where(active, pos + 1, pos)
                 rem = jnp.where(active & ~feeding, rem - 1, rem)
-                return i + 1, cache, tok, pos, rem, out
+                # ---- completion log + in-segment slot refill ----------
+                # Freshly finished slots are logged (slot, step) in slot
+                # order; the first `avail` of them pull the next staged
+                # requests (FIFO: j-th admitted completion of the segment
+                # takes ring entry j), resetting the slot inside the loop
+                # so the dispatch retires multiple requests per slot.
+                fin = active & ~feeding & (rem == 0)
+                nfin = jnp.sum(fin.astype(jnp.int32))
+                head = st["head"]
+                avail = n_stage - head
+                rank = jnp.cumsum(fin.astype(jnp.int32)) - 1
+                adm = fin & (rank < avail)
+                src = jnp.clip(head + rank, 0, R - 1)
+                log_idx = jnp.where(fin, st["n_comp"] + rank, max_comps)
+                comp_slot = st["comp_slot"].at[log_idx].set(
+                    slot_ids, mode="drop")
+                comp_step = st["comp_step"].at[log_idx].set(i, mode="drop")
+                comp_adm = st["comp_adm"].at[log_idx].set(
+                    adm.astype(jnp.int32), mode="drop")
+                rows = jnp.take(ring_tok, src, axis=0)     # (B, max_len)
+                tok = jnp.where(adm[:, None], rows[:, :1], tok)
+                pbuf = jnp.where(adm[:, None], rows, pbuf)
+                pos = jnp.where(adm, 0, pos)
+                rem = jnp.where(adm, jnp.take(ring_new, src), rem)
+                plen = jnp.where(adm, jnp.take(ring_plen, src), plen)
+                cache = jax.tree.map(
+                    lambda leaf, bax, sax, row:
+                        leaf if sax != -1
+                        else KV.reset_slot_rows(leaf, bax, adm, row),
+                    cache, baxes, saxes, reset_rows)
+                new = dict(
+                    i=i + 1, cache=cache, tok=tok, pos=pos, rem=rem,
+                    plen=plen, pbuf=pbuf, out=out,
+                    head=head + jnp.minimum(nfin, jnp.maximum(avail, 0)),
+                    comp_slot=comp_slot, comp_step=comp_step,
+                    comp_adm=comp_adm, n_comp=st["n_comp"] + nfin,
+                    busy=st["busy"] + jnp.sum(active.astype(jnp.int32)))
+                if paged:
+                    new["bt"] = jnp.where(adm[:, None],
+                                          jnp.take(ring_bt, src, axis=0),
+                                          bt_c)
+                return new
 
-            out0 = jnp.full((slots, steps), -1, jnp.int32)
-            i, cache, tok, pos, rem, out = lax.while_loop(
-                cond, body, (jnp.int32(0), cache, tok, pos, rem, out0))
-            return cache, tok, pos, rem, out, i
+            st0 = dict(i=jnp.int32(0), cache=cache, tok=tok, pos=pos,
+                       rem=rem, plen=plen, pbuf=pbuf,
+                       out=jnp.full((slots, steps), -1, jnp.int32),
+                       head=jnp.int32(0),
+                       comp_slot=jnp.zeros((max_comps,), jnp.int32),
+                       comp_step=jnp.zeros((max_comps,), jnp.int32),
+                       comp_adm=jnp.zeros((max_comps,), jnp.int32),
+                       n_comp=jnp.int32(0), busy=jnp.int32(0))
+            if paged:
+                st0["bt"] = jnp.asarray(bt)
+            st = lax.while_loop(cond, body, st0)
+            return (st["cache"], st["tok"], st["pos"], st["rem"],
+                    st["plen"], st["pbuf"], st["out"], st["comp_slot"],
+                    st["comp_step"], st["comp_adm"], st["n_comp"],
+                    st["busy"], st["i"])
 
         if paged:
             self._decode_fn = jax.jit(decode_segment)
         else:
             self._decode_fn = jax.jit(
-                lambda params, cache, tok, pos, rem, plen, pbuf:
-                decode_segment(params, cache, tok, pos, rem, plen, pbuf))
+                lambda params, cache, tok, pos, rem, plen, pbuf,
+                rtok, rplen, rnew, n_stage:
+                decode_segment(params, cache, tok, pos, rem, plen, pbuf,
+                               rtok, rplen, rnew, n_stage))
         return self._decode_fn
 
     # ------------------------------------------------------------------
@@ -540,11 +686,15 @@ class ServingEngine:
                 jax.block_until_ready(out[-1])
         if include_decode and self._decode_fn is None:
             fn = self._get_decode()
+            R = max(self.stage_slots, 1)
             args = [self.params, self._cache, self._tok, self._pos,
                     jnp.zeros((self.max_batch,), jnp.int32), self._plen,
-                    self._pbuf]
+                    self._pbuf, np.zeros((R, self.max_len), np.int32),
+                    np.zeros((R,), np.int32), np.zeros((R,), np.int32),
+                    np.int32(0)]
             if self._paged:
-                args.append(self._bt)
+                args += [self._bt, np.full((R, self.pages_per_slot),
+                                           self.n_pages, np.int32)]
             out = fn(*args)
             jax.block_until_ready(out[-1])
         if self.chunk_threshold is not None and self._chunk_fn is None:
@@ -606,10 +756,11 @@ class ServingEngine:
         if new:
             self._bt[slot, held:held + len(new)] = new
 
-    def _admit_chunk(self, r: Request, slot: int) -> None:
-        """Chunked admission: no prefill dispatch — stage the prompt in
-        the slot's device prompt buffer; the next decode segments feed it
-        ``decode_block`` tokens at a time."""
+    def _chunk_seat(self, r: Request, slot: int) -> None:
+        """Stage ``r``'s prompt in ``slot``'s device prompt buffer and
+        reset the slot's state rows (no prefill dispatch): shared by
+        chunked admission and the boundary fallback that seats staged
+        requests into freed slots."""
         plen = len(r.prompt)
         row = np.zeros((1, self.max_len), np.int32)
         row[0, :plen] = r.prompt
@@ -620,6 +771,12 @@ class ServingEngine:
             self._pbuf, np.asarray([slot], np.int32), row,
             np.asarray([plen], np.int32),
             np.asarray([max(r.max_new_tokens, 1)], np.int32))
+
+    def _admit_chunk(self, r: Request, slot: int) -> None:
+        """Chunked admission: no prefill dispatch — stage the prompt in
+        the slot's device prompt buffer; the next decode segments feed it
+        ``decode_block`` tokens at a time."""
+        self._chunk_seat(r, slot)
         self.stats["chunk_admits"] += 1
         self.stats["admitted"] += 1
 
@@ -627,8 +784,9 @@ class ServingEngine:
     # open-loop core: submit / step / drain_completions
     @property
     def busy(self) -> bool:
-        """True while any request is pending admission or mid-decode."""
-        return bool(self._pending) or \
+        """True while any request is pending admission, staged for
+        in-segment admission, or mid-decode."""
+        return bool(self._pending) or bool(self._staged) or \
             any(r is not None for r in self._slot_req)
 
     def _validate(self, r: Request) -> None:
@@ -654,12 +812,36 @@ class ServingEngine:
         self._pending.append(r)
 
     def _admit_pending(self) -> None:
-        """Fill free slots from the pending queue (grouped by bucket).
+        """Fill free slots from the pending queue (grouped by bucket),
+        then top up the staging ring for in-segment admission.
 
         In paged mode admission is additionally gated on free pages: the
         queue head must fit its worst-case page reservation before it (or
-        anything behind it — FIFO) is admitted. Prompts longer than
-        ``chunk_threshold`` take the chunked path; the rest prefill."""
+        anything behind it — FIFO) is admitted or staged. Prompts longer
+        than ``chunk_threshold`` take the chunked path; the rest prefill.
+        Staged requests hold their worst-case reservation from staging
+        time under a per-request ticket, with their first ``decode_block``
+        positions' pages materialized up front — the fused segment that
+        pulls them in has no host boundary at which to grow them."""
+        now = time.perf_counter()
+        # boundary fallback: seat already-staged requests into free slots
+        # the loop never refilled — a slot can come back without an
+        # in-loop admission (e.g. a max_new==1 prefill finishes at
+        # admission and is swept at harvest), and the staged FIFO precedes
+        # everything still in pending. A staged request at a boundary IS a
+        # chunk admission whose pages are already reserved.
+        while self._staged and self._free:
+            r, ticket, bt_row = self._staged.popleft()
+            slot = self._free.pop()
+            if self._alloc is not None:
+                self._alloc.rekey(ticket, slot)
+                self._bt[slot, :] = bt_row
+            r.admitted = now
+            self._chunk_seat(r, slot)
+            self.stats["admitted"] += 1
+            self._gen[slot] = []
+            self._slot_req[slot] = r
+            self._slot_pos[slot] = 0
         prefills: List[Tuple[Request, int]] = []
         while self._pending and self._free:
             r = self._pending[0]
@@ -670,6 +852,7 @@ class ServingEngine:
             slot = self._free.pop()
             if self._alloc is not None:
                 self._alloc.reserve(slot, self._n_positions(r))
+            r.admitted = now
             if self.chunk_threshold is not None and \
                     len(r.prompt) > self.chunk_threshold:
                 self._admit_chunk(r, slot)
@@ -693,11 +876,49 @@ class ServingEngine:
                     self._gen[s] = [int(f)]
                     self._slot_req[s] = r
                     self._slot_pos[s] = len(r.prompt)
+        # ---- staging ring: queue overflow rides into the segment ------
+        while self.stage_slots and self._pending and \
+                len(self._staged) < self.stage_slots:
+            r = self._pending[0]
+            npos = self._n_positions(r)
+            if self._alloc is not None and \
+                    not self._alloc.can_reserve(npos):
+                break                       # FIFO: nothing jumps the line
+            self._pending.popleft()
+            ticket = ("stage", self._stage_seq)
+            self._stage_seq += 1
+            bt_row = None
+            if self._alloc is not None:
+                self._alloc.reserve(ticket, npos)
+                pages = self._alloc.cover(
+                    ticket, min(npos, self.decode_block))
+                bt_row = np.full((self.pages_per_slot,), self.n_pages,
+                                 np.int32)
+                bt_row[:len(pages)] = pages
+            self._staged.append((r, ticket, bt_row))
+            self.stats["staged"] += 1
+
+    def _retire_slot(self, slot: int, r: Request, now: float) -> None:
+        """Finish ``slot``'s current occupant: hand it its tokens, free its
+        pages. The caller decides what happens to the slot next (freed, or
+        re-occupied by a staged request the segment pulled in)."""
+        r.tokens = np.asarray(
+            self._gen.pop(slot)[: r.max_new_tokens], np.int32)
+        r.latency = now - r.arrival
+        self.stats["tokens_generated"] += len(r.tokens)
+        self._slot_req[slot] = None
+        if self._alloc is not None:
+            # pages return to the pool the moment a sequence ends
+            self._alloc.release(slot)
+            self._bt[slot, :] = self.n_pages
+        self._completed.append(r)
 
     def step(self) -> int:
-        """One engine step: admit pending requests into free slots, run one
-        fused decode segment, harvest finished slots. Returns the number of
-        decode steps executed (0 when the engine is idle)."""
+        """One engine step: admit pending requests into free slots (staging
+        the overflow into the device ring), run one fused decode segment,
+        harvest finished slots — decoding the segment's completion log to
+        split each slot's emission row between its successive occupants.
+        Returns the number of decode steps executed (0 when idle)."""
         self._admit_pending()
         live = sum(r is not None for r in self._slot_req)
         if live == 0:
@@ -715,41 +936,102 @@ class ServingEngine:
                             self._n_positions(r))
                 self._grow_slot(s, cover)
         decode = self._get_decode()
+        R = max(self.stage_slots, 1)
+        ring_tok = np.zeros((R, self.max_len), np.int32)
+        ring_plen = np.zeros((R,), np.int32)
+        ring_new = np.zeros((R,), np.int32)
+        ring_bt = np.full((R, self.pages_per_slot), self.n_pages,
+                          np.int32) if self._paged else None
+        for j, (r, _ticket, bt_row) in enumerate(self._staged):
+            ring_tok[j, :len(r.prompt)] = r.prompt
+            ring_plen[j] = len(r.prompt)
+            ring_new[j] = max(r.max_new_tokens, 1)
+            if ring_bt is not None:
+                ring_bt[j] = bt_row
         args = [self.params, self._cache, self._tok, self._pos, self._rem,
-                self._plen, self._pbuf]
+                self._plen, self._pbuf, ring_tok, ring_plen, ring_new,
+                np.int32(len(self._staged))]
         if self._paged:
-            args.append(self._bt)
-        self._cache, self._tok, self._pos, self._rem, out, n_steps = \
-            decode(*args)
+            args += [self._bt, ring_bt]
+        (self._cache, self._tok, self._pos, self._rem, self._plen,
+         self._pbuf, out, comp_slot, comp_step, comp_adm, n_comp,
+         busy_steps, n_steps) = decode(*args)
         self.stats["decode_dispatches"] += 1
         out_np = np.asarray(out)                     # the one host sync
-        rem_np = np.asarray(self._rem)
+        comp_slot = np.asarray(comp_slot)
+        comp_step = np.asarray(comp_step)
+        comp_adm = np.asarray(comp_adm)
+        n_comp = int(n_comp)
+        n_steps = int(n_steps)
         self._slot_pos = np.asarray(self._pos).astype(np.int64)
-        self.stats["decode_steps"] += int(n_steps)
+        self.stats["decode_steps"] += n_steps
+        self.stats["busy_slot_steps"] += int(busy_steps)
+        self.stats["bubble_slot_steps"] += \
+            n_steps * self.max_batch - int(busy_steps)
         now = time.perf_counter()
-        for slot, r in enumerate(self._slot_req):
+        # completion log, in segment order: each record closes the slot's
+        # current occupant over out[slot, consumed:step+1]; an "admitted"
+        # record then seats the next staged request (device admission is
+        # FIFO over the ring, mirrored by popping self._staged in order)
+        consumed = np.zeros((self.max_batch,), np.int64)
+        for j in range(n_comp):
+            s = int(comp_slot[j])
+            t = int(comp_step[j])
+            r = self._slot_req[s]
+            row = out_np[s, consumed[s]:t + 1]
+            self._gen[s].extend(int(x) for x in row[row >= 0])
+            consumed[s] = t + 1
+            self._retire_slot(s, r, now)
+            if comp_adm[j]:
+                nr, ticket, bt_row = self._staged.popleft()
+                if self._alloc is not None:
+                    self._alloc.rekey(ticket, s)
+                    self._bt[s, :] = bt_row
+                nr.admitted = now
+                self._slot_req[s] = nr
+                self._gen[s] = []
+                self.stats["admitted"] += 1
+                self.stats["inseg_admissions"] += 1
+            else:
+                self._free.append(s)
+        for s, r in enumerate(self._slot_req):
             if r is None:
                 continue
-            row = out_np[slot]
-            self._gen[slot].extend(int(t) for t in row[row >= 0])
-            if rem_np[slot] == 0:
-                r.tokens = np.asarray(
-                    self._gen.pop(slot)[: r.max_new_tokens], np.int32)
-                r.latency = now - r.arrival
-                self.stats["tokens_generated"] += len(r.tokens)
-                self._slot_req[slot] = None
-                self._free.append(slot)
-                if self._alloc is not None:
-                    # pages return to the pool the moment a sequence ends
-                    self._alloc.release(slot)
-                    self._bt[slot, :] = self.n_pages
-                self._completed.append(r)
-        return int(n_steps)
+            row = out_np[s, consumed[s]:]
+            self._gen[s].extend(int(x) for x in row[row >= 0])
+        # a prefilled request with max_new == 1 is complete at admission
+        # (its only token came from prefill, rem == 0): it never passes
+        # through the loop's refill logic, so sweep it here
+        rem_np = np.asarray(self._rem)
+        for s, r in enumerate(self._slot_req):
+            if r is not None and rem_np[s] == 0:
+                self._retire_slot(s, r, now)
+                self._free.append(s)
+        return n_steps
 
     def drain_completions(self) -> List[Request]:
         """Return (and clear) the requests completed since the last drain."""
         out, self._completed = self._completed, []
         return out
+
+    @property
+    def occupancy(self) -> Dict[str, float]:
+        """Derived occupancy metrics over all fused segments so far:
+        slot-busy fraction (active vs total slot-steps inside segments),
+        in-segment admissions per segment, and the absolute bubble (idle
+        slot-step) count. ``EngineExecutor`` snapshots deltas of these
+        per run into its decision log."""
+        busy = self.stats["busy_slot_steps"]
+        bubble = self.stats["bubble_slot_steps"]
+        segs = self.stats["decode_dispatches"]
+        total = busy + bubble
+        return {
+            "slot_busy_frac": busy / total if total else 0.0,
+            "admissions_per_segment":
+                self.stats["inseg_admissions"] / segs if segs else 0.0,
+            "bubble_slot_steps": float(bubble),
+            "segments": float(segs),
+        }
 
     def serve(self, reqs: Sequence[Request]) -> List[Request]:
         """Serve requests to completion: a thin closed loop over the

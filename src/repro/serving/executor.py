@@ -38,9 +38,13 @@ map is an LRU: the least-recently-run variant's engine is dropped when the
 cap is hit (engines are idle between ``run()`` calls, so nothing in flight
 is lost) and rebuilds lazily — warmup happens at rebuild, outside the
 measured window — keeping multi-arch ``backend="real"`` clusters
-host-sized. ``page_size``/``n_pages``/``chunk_threshold`` pass through to
-the engines: the paged KV data plane and chunked prefill under the full
-INFaaS control plane.
+host-sized. ``page_size``/``n_pages``/``chunk_threshold``/``stage_slots``
+pass through to the engines: the paged KV data plane, chunked prefill,
+and in-segment admission under the full INFaaS control plane. Each
+``run()`` appends a record to ``occupancy_log`` — the executor's decision
+log — with the run's fused-segment occupancy (slot-busy fraction,
+in-segment admissions per segment, bubble slot-steps), so the control
+plane can see how densely the data plane is packing its hardware.
 """
 from __future__ import annotations
 
@@ -75,6 +79,7 @@ class EngineExecutorConfig:
     n_pages: Optional[int] = None     # pool size (None = slot parity)
     chunk_threshold: Optional[int] = None  # chunked prefill past this len
     max_engines: Optional[int] = None  # LRU cap on live engines (None = off)
+    stage_slots: int = 0              # in-segment admission ring (0 = off)
 
 
 class EngineExecutor:
@@ -96,6 +101,13 @@ class EngineExecutor:
         self.observations: Dict[str, Dict[int, Deque[float]]] = {}
         self.refits: Dict[str, int] = {}                 # refit count
         self.evictions = 0                               # LRU engine drops
+        # per-run occupancy records (the executor's decision log): how
+        # full the fused segments ran, and how many requests in-segment
+        # admission packed into them — the data-plane side of the control
+        # plane's decision accounting. Bounded like `observations` so a
+        # long-running cluster's memory stays flat.
+        self.occupancy_log: Deque[Dict[str, Any]] = \
+            deque(maxlen=max(cfg.obs_window * 8, 256))
         self._models = model_cache if model_cache is not None else {}
         self._rid = itertools.count()
 
@@ -126,12 +138,10 @@ class EngineExecutor:
                     self.evictions += 1
             model, params = self._model(variant.arch)
             kwargs = {}
-            # xLSTM has no attention KV to page and chunked prefill is
-            # engine-gated per family (the engine clamps both knobs
-            # itself); audio rejects paging outright, so a mixed-arch
-            # cluster falls back to contiguous there
-            if self.cfg.page_size is not None and \
-                    model.cfg.family != "audio":
+            # xLSTM has no attention KV to page and chunked prefill /
+            # in-segment admission are engine-gated per family (the
+            # engine clamps the knobs itself)
+            if self.cfg.page_size is not None:
                 kwargs.update(page_size=self.cfg.page_size,
                               n_pages=self.cfg.n_pages)
             eng = ServingEngine(
@@ -142,6 +152,7 @@ class EngineExecutor:
                 decode_block=self.cfg.decode_block,
                 min_bucket=self.cfg.min_bucket,
                 chunk_threshold=self.cfg.chunk_threshold,
+                stage_slots=self.cfg.stage_slots,
                 **kwargs)
             eng.warmup(prompt_lens=[self.cfg.prompt_len])
         # dict order doubles as the LRU list: reinsert on every access
@@ -171,6 +182,9 @@ class EngineExecutor:
         if real_lens:
             eng.warmup(prompt_lens=real_lens)
         groups: List[Tuple[ExecRequest, List[Request]]] = []
+        occ0 = {k: eng.stats[k] for k in
+                ("busy_slot_steps", "bubble_slot_steps",
+                 "inseg_admissions", "decode_dispatches")}
         t0 = time.perf_counter()
         for er in requests:
             ers: List[Request] = []
@@ -194,6 +208,19 @@ class EngineExecutor:
             eng.step()
         eng.drain_completions()
         dt = time.perf_counter() - t0
+        # decision-log entry: per-run occupancy of the fused segments
+        d = {k: eng.stats[k] - occ0[k] for k in occ0}
+        total = d["busy_slot_steps"] + d["bubble_slot_steps"]
+        segs = d["decode_dispatches"]
+        self.occupancy_log.append({
+            "variant": variant.name, "batch": int(batch),
+            "service_s": dt, "segments": segs,
+            "slot_busy_frac":
+                d["busy_slot_steps"] / total if total else 0.0,
+            "admissions_per_segment":
+                d["inseg_admissions"] / segs if segs else 0.0,
+            "bubble_slot_steps": d["bubble_slot_steps"],
+        })
         for er, ers in groups:
             if er.on_outputs is not None:
                 er.on_outputs([np.asarray(r.tokens, np.int32)

@@ -1,12 +1,15 @@
 """Property-based tests (hypothesis) on the paged-KV page allocator.
 
 The ``PageAllocator`` is the host-side half of the paged serving engine:
-admission reserves a slot's worst-case page count, ``cover()`` hands out
-physical pages as the slot's position grows (chunked prefill grows in
+admission reserves a holder's worst-case page count, ``cover()`` hands out
+physical pages as the holder's position grows (chunked prefill grows in
 ``decode_block``-sized strides), ``release()`` returns them at finish.
-Under arbitrary admit/grow/finish interleavings the pool must never
-double-book a page, must conserve ``free + live == n_pages``, and must
-return every page at drain.
+In-segment admission adds *staged* holders: requests that reserve (and
+partially cover) under a per-request ticket before owning a slot, and are
+``rekey()``-ed onto the slot the fused segment pulls them into. Under
+arbitrary admit/stage/grow/promote/finish interleavings the pool must
+never double-book a page, must conserve ``free + staged + live ==
+n_pages``, and must return every page at drain.
 """
 import pytest
 
@@ -77,6 +80,78 @@ def test_pages_needed_is_exact_ceiling(n_pages, page_size, npos):
     need = alloc.pages_needed(npos)
     assert need * page_size >= npos
     assert (need - 1) * page_size < npos or need == 0
+
+
+STAGE_OPS = st.lists(
+    st.tuples(st.sampled_from(["admit", "stage", "grow", "promote",
+                               "finish"]),
+              st.integers(0, 2**31 - 1), st.integers(1, 96)),
+    min_size=1, max_size=80)
+
+
+@settings(max_examples=150, deadline=None)
+@given(STAGE_OPS, st.integers(1, 48), st.integers(1, 16), st.integers(1, 8))
+def test_staged_reservations_invariants(ops, n_pages, page_size, max_slots):
+    """The engine's in-segment staging discipline: staged tickets hold
+    worst-case reservations (first stride covered up front) that gate
+    further admission, promote() moves a ticket onto a freed slot, and
+    no interleaving double-books a page or loses free+staged+live==pool.
+    """
+    alloc = PageAllocator(n_pages, page_size)
+    live = {}                            # slot -> npos
+    staged = {}                          # ticket -> npos
+    next_slot, next_ticket = 0, 0
+    for kind, pick, npos in ops:
+        if kind == "admit":
+            if next_slot >= max_slots or not alloc.can_reserve(npos):
+                continue
+            slot = next_slot
+            next_slot += 1
+            alloc.reserve(slot, npos)
+            live[slot] = npos
+            alloc.cover(slot, min(npos, page_size))
+        elif kind == "stage":
+            if not alloc.can_reserve(npos):
+                continue
+            ticket = ("stage", next_ticket)
+            next_ticket += 1
+            alloc.reserve(ticket, npos)
+            # first decode_block-ish stride materialized at staging time
+            alloc.cover(ticket, min(npos, page_size))
+            staged[ticket] = npos
+        elif kind == "grow" and live:
+            slot = sorted(live)[pick % len(live)]
+            grown = alloc.cover(slot, npos)
+            assert len(alloc.pages_of(slot)) <= \
+                alloc.pages_needed(live[slot])
+            assert len(grown) == len(set(grown))
+        elif kind == "promote" and staged and live:
+            # a live slot finishes mid-segment; the oldest staged ticket
+            # takes its place (release then rekey, as the harvest does)
+            slot = sorted(live)[pick % len(live)]
+            alloc.release(slot)
+            del live[slot]
+            ticket = sorted(staged)[0]
+            alloc.rekey(ticket, slot)
+            live[slot] = staged.pop(ticket)
+        elif kind == "finish" and live:
+            slot = sorted(live)[pick % len(live)]
+            pages = alloc.release(slot)
+            del live[slot]
+            assert len(pages) == len(set(pages))
+        # ---- invariants: staged and live holders both count ----------
+        held = alloc.live_pages()
+        assert len(held) == len(set(held)), "double-booked page"
+        staged_pages = sum(len(alloc.pages_of(t)) for t in staged)
+        live_pages = sum(len(alloc.pages_of(s)) for s in live)
+        assert staged_pages + live_pages == len(held)
+        assert alloc.n_free + staged_pages + live_pages == alloc.n_pages, \
+            "free + staged + live != pool"
+        assert alloc.committed <= alloc.n_pages
+    for holder in sorted(staged) + sorted(live):
+        alloc.release(holder)
+    assert alloc.n_free == alloc.n_pages
+    assert alloc.committed == 0
 
 
 @given(st.integers(1, 32), st.integers(1, 8))
