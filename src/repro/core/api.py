@@ -229,6 +229,13 @@ class QueryResult:
     worker: str
     processed: int = 0                # offline: inputs completed
     total: int = 0                    # offline: inputs requested
+    # served correctly but on borrowed time: some of the query's work was
+    # preempted under KV memory pressure and recovered bit-identically
+    # (outputs are unaffected; latency absorbed the replay)
+    degraded: bool = False
+    # dispatch attempts the master burned placing this query (1 = first
+    # try; >1 = retried with exponential backoff after failures)
+    attempts: int = 0
 
 
 class QueryHandle:
@@ -308,7 +315,8 @@ class QueryHandle:
                 latency=(j.finish - j.arrival) if j.finish >= 0 else -1.0,
                 queue=0.0, load=0.0, compute=0.0,
                 slo=None, slo_met=None, variant=j.variant, worker="",
-                processed=j.processed, total=j.total_inputs)
+                processed=j.processed, total=j.total_inputs,
+                degraded=j.degraded, attempts=j.attempts)
         q = self.query
         queue, load, compute = self.breakdown
         return QueryResult(
@@ -316,7 +324,8 @@ class QueryHandle:
             outputs=q.outputs, latency=q.latency,
             queue=queue, load=load, compute=compute,
             slo=q.slo, slo_met=self.slo_met,
-            variant=q.variant, worker=q.worker)
+            variant=q.variant, worker=q.worker,
+            degraded=q.degraded, attempts=q.attempts)
 
     @property
     def breakdown(self) -> Tuple[float, float, float]:

@@ -9,6 +9,7 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
+import random
 import time
 import warnings
 from typing import Callable, Dict, List, Optional, Tuple
@@ -35,7 +36,14 @@ class MasterConfig:
         default_factory=MasterScaleConfig)
     hedge_enabled: bool = False
     hedge_factor: float = 3.0       # hedge when elapsed > factor * expected
+    # bounded retry with exponential backoff + jitter: retry k (1-based)
+    # waits min(retry_delay * retry_backoff**(k-1), retry_delay_cap),
+    # scaled by a uniform +/- retry_jitter fraction (deterministic RNG) so
+    # co-failing queries don't re-dispatch in lockstep
     retry_delay: float = 0.25
+    retry_backoff: float = 2.0
+    retry_delay_cap: float = 2.0
+    retry_jitter: float = 0.1
     max_retries: int = 8
     heartbeat_timeout: float = 6.0
     # baseline-policy switches (paper §8.1): INDV = no variant upgrading;
@@ -65,6 +73,7 @@ class Master:
         self._qid = itertools.count()
         self._jid = itertools.count()
         self._worker_seq = itertools.count()
+        self._retry_rng = random.Random(0)   # jitter: deterministic runs
         self.autoscaler = None
         if autoscale:
             self.autoscaler = MasterAutoscaler(
@@ -110,14 +119,21 @@ class Master:
             w.fail()
 
     def _failure_sweep(self) -> None:
-        """Detect dead workers via missed heartbeats; re-route their load."""
+        """Detect dead workers via missed heartbeats; re-route their load.
+
+        Routing goes through ``Worker.fail()`` — the same path explicit
+        failure injection uses — so the timed-out worker's pending *and
+        in-flight* queries fail through their ``done_cb`` and re-enter the
+        master's retry machinery, instead of stranding forever on a
+        machine that will never answer (a hung worker's scheduled
+        completions never fire)."""
         now = self.loop.now()
         for name, st in list(self.store.workers.items()):
             if st.alive and now - st.heartbeat > self.cfg.heartbeat_timeout:
                 self.store.mark_dead(name)
                 w = self.workers.get(name)
                 if w is not None:
-                    w.alive = False
+                    w.fail()
 
     # ------------------------------------------------------------------
     # registration (paper §3.1)
@@ -199,12 +215,23 @@ class Master:
         self._dispatch(q, sel, retries=0)
         return handle
 
+    def _retry_delay_for(self, retries: int) -> float:
+        """Backoff before retry number ``retries + 1``: exponential in the
+        retries already burned, capped, with deterministic +/- jitter."""
+        base = min(self.cfg.retry_delay * self.cfg.retry_backoff ** retries,
+                   self.cfg.retry_delay_cap)
+        jit = self.cfg.retry_jitter * (2.0 * self._retry_rng.random() - 1.0)
+        return max(base * (1.0 + jit), 0.0)
+
+    def _schedule_retry(self, q: Query, retries: int) -> None:
+        self.loop.schedule(self._retry_delay_for(retries),
+                           lambda: self._redispatch(q, retries + 1))
+
     def _dispatch(self, q: Query, sel: Selection, retries: int) -> None:
+        q.attempts = retries + 1
         if sel.variant is None or sel.worker is None:
             if retries < self.cfg.max_retries:
-                self.loop.schedule(
-                    self.cfg.retry_delay,
-                    lambda: self._redispatch(q, retries + 1))
+                self._schedule_retry(q, retries)
             else:
                 q.failed = True
                 q.finish = self.loop.now()
@@ -215,7 +242,7 @@ class Master:
         q.variant = sel.variant.name
         worker = self.workers.get(sel.worker)
         if worker is None or not worker.alive:
-            self._redispatch(q, retries + 1)
+            self._schedule_retry(q, retries)
             return
         if sel.needs_load and self.store.instance(
                 sel.variant.name, sel.worker) is None:
@@ -225,9 +252,11 @@ class Master:
 
         def on_done(qq: Query) -> None:
             if qq.failed and retries < self.cfg.max_retries:
+                # worker died under the query (or rejected it): back off,
+                # then replay the immutable spec through selection again
                 qq.failed = False
                 qq.done_cb = orig_cb
-                self._redispatch(qq, retries + 1)
+                self._schedule_retry(qq, retries)
                 return
             if orig_cb:
                 orig_cb(qq)
@@ -278,6 +307,8 @@ class Master:
                 q.violated = winner.violated
                 q.outputs = winner.outputs
                 q.load_wait = winner.load_wait
+                q.degraded = winner.degraded
+                q.preemptions = winner.preemptions
                 q.cancelled = False
                 if q.done_cb:
                     q.done_cb(q)
@@ -307,6 +338,7 @@ class Master:
         return handle
 
     def _dispatch_offline(self, job: OfflineJob, retries: int) -> None:
+        job.attempts = retries + 1
         sel = self._select(job.spec, batch=1, record=False)
         worker = None
         if sel.variant is not None and sel.worker is not None:
@@ -322,10 +354,11 @@ class Master:
                 # the variant
                 worker = None
         if worker is None:
-            # nothing can serve it yet: scheduled retry, like online
+            # nothing can serve it yet: backed-off scheduled retry, like
+            # online
             if retries < self.cfg.max_retries:
                 self.loop.schedule(
-                    self.cfg.retry_delay,
+                    self._retry_delay_for(retries),
                     lambda: self._dispatch_offline(job, retries + 1))
             else:
                 job.failed = True

@@ -66,6 +66,13 @@ class Query:
     failed: bool = False
     cancelled: bool = False         # hedging: the losing copy is cancelled
     hedge_of: Optional[int] = None
+    # dispatch attempts so far (1 = first try); the master stamps this on
+    # every (re)dispatch so results can surface how hard placement was
+    attempts: int = 0
+    # served correctly but on borrowed time: some of this query's work was
+    # preempted under memory pressure and recovered (bit-identical replay)
+    degraded: bool = False
+    preemptions: int = 0            # engine preempt count behind `degraded`
     done_cb: Optional[Callable[["Query"], None]] = None
 
     @property
@@ -86,6 +93,8 @@ class OfflineJob:
     arrival: float = 0.0
     finish: float = -1.0
     failed: bool = False            # no capacity after max_retries
+    attempts: int = 0               # placement attempts (backoff between)
+    degraded: bool = False          # any chunk recovered from a preempt
     done_cb: Optional[Callable[["OfflineJob"], None]] = None
 
     @property
@@ -101,11 +110,16 @@ class ExecRequest:
     the executor substitutes synthetic inputs, ``n_inputs`` of them).
     ``on_outputs`` is called with the per-input generated token-id arrays
     when a real executor finishes the batch; sim executors ignore it.
+    ``slo`` threads the query's latency objective down to the engine's
+    SLO-aware preemption; ``on_report`` carries the degradation verdict
+    (preemption counts) back when a real executor finishes.
     """
     n_inputs: int
     prompts: Tuple = ()
     max_new_tokens: int = 0         # 0 -> executor default
     on_outputs: Optional[Callable[[List[Any]], None]] = None
+    slo: Optional[float] = None
+    on_report: Optional[Callable[[Dict[str, Any]], None]] = None
 
 
 @runtime_checkable
@@ -173,7 +187,7 @@ class _Device:
 
 class _Job:
     __slots__ = ("instance", "queries", "batch", "offline_job", "duration",
-                 "start_time", "requests")
+                 "start_time", "requests", "abandoned")
 
     def __init__(self, instance, queries, batch, offline_job=None,
                  requests=None):
@@ -185,6 +199,10 @@ class _Job:
         self.start_time = 0.0
         # per-query ExecRequests: real payload prompts down, outputs back
         self.requests: List[ExecRequest] = requests or []
+        # worker failed over while this job was queued/in flight: its
+        # queries were already failed through the retry path, so the
+        # stale scheduled completion must become a no-op
+        self.abandoned = False
 
 
 class _LocalInstance:
@@ -218,6 +236,10 @@ class Worker:
         self.cfg = cfg
         self.metrics = metrics if metrics is not None else []
         self.alive = True
+        # fault injection: a hung worker is alive but frozen — heartbeats
+        # stop, in-flight jobs never complete, nothing new dispatches.
+        # Only the master's heartbeat sweep can detect and fail it.
+        self._hung = False
         self.slowdown = slowdown    # straggler injection (>1 = slow worker)
         self.instances: Dict[str, _LocalInstance] = {}
         self.offline_jobs: List[OfflineJob] = []
@@ -327,17 +349,26 @@ class Worker:
         """The executor-facing slice of one query: real prompts when the
         query carries a payload (outputs land back on ``q.outputs``),
         synthetic accounting otherwise — tokens decoded from synthetic
-        stand-ins are not answers, so no sink is attached."""
+        stand-ins are not answers, so no sink is attached. Either way the
+        query's SLO rides along (the engine's preemption policy is
+        slack-based) and any degradation report lands back on the query."""
+
+        def report(rep, qq=q):
+            qq.preemptions += int(rep.get("preemptions", 0))
+            qq.degraded = qq.degraded or bool(rep.get("degraded"))
+
         if q.payload is not None:
             return ExecRequest(
                 n_inputs=q.n_inputs, prompts=q.payload.prompts,
                 max_new_tokens=q.payload.max_new_tokens,
-                on_outputs=lambda outs, qq=q: setattr(qq, "outputs", outs))
-        return ExecRequest(n_inputs=q.n_inputs)
+                on_outputs=lambda outs, qq=q: setattr(qq, "outputs", outs),
+                slo=q.slo, on_report=report)
+        return ExecRequest(n_inputs=q.n_inputs, slo=q.slo,
+                           on_report=report)
 
     def _try_dispatch(self, vname: str) -> None:
         li = self.instances.get(vname)
-        if li is None or not li.running:
+        if li is None or not li.running or self._hung:
             return
         dev = self.devices[li.variant.hardware]
         while li.pending and li.outstanding < self._concurrency(li):
@@ -413,6 +444,13 @@ class Worker:
             self._start(dev, dev.waiting.popleft())
 
     def _complete(self, dev: _Device, job: _Job) -> None:
+        if job.abandoned or self._hung:
+            # abandoned: fail() already failed this job's queries through
+            # the retry path — completing it too would double-fire their
+            # callbacks onto the retried copies. Hung: a frozen worker
+            # finishes nothing; the job stays wedged until the master's
+            # heartbeat sweep fails this worker.
+            return
         if not self.alive:
             # worker died mid-flight: surface the failure to the master
             for q in job.queries:
@@ -471,7 +509,7 @@ class Worker:
         return False
 
     def _pump_offline(self) -> None:
-        if not self.alive or self._offline_throttled():
+        if not self.alive or self._hung or self._offline_throttled():
             return
         for job in list(self.offline_jobs):
             if job.done or job.failed:
@@ -494,14 +532,17 @@ class Worker:
                 reqs = [ExecRequest(
                     n_inputs=chunk, prompts=sl,
                     max_new_tokens=job.payload.max_new_tokens,
-                    on_outputs=lambda outs, jj=job: jj.outputs.extend(outs))]
+                    on_outputs=lambda outs, jj=job: jj.outputs.extend(outs),
+                    on_report=lambda rep, jj=job: setattr(
+                        jj, "degraded",
+                        jj.degraded or bool(rep.get("degraded"))))]
             j = _Job(li, [], chunk, offline_job=job, requests=reqs)
             self._submit(dev, j)
 
     # ------------------------------------------------------------------
     # monitoring daemon (2 s updates, paper §4/§7)
     def monitor_tick(self) -> None:
-        if not self.alive:
+        if not self.alive or self._hung:
             return
         now = self.loop.now()
         window = self.cfg.monitor_period
@@ -535,12 +576,48 @@ class Worker:
 
     # ------------------------------------------------------------------
     # failure injection (fault-tolerance tests)
+    def hang(self) -> None:
+        """Freeze the worker without marking it dead: heartbeats stop,
+        in-flight jobs never complete, new work queues but never runs.
+        Models a wedged machine — only the master's heartbeat sweep can
+        detect it (``Master._failure_sweep`` then calls ``fail()``, which
+        routes every stranded query into the retry path)."""
+        self._hung = True
+
     def fail(self) -> None:
+        """Kill the worker: everything it holds — pending queries, jobs
+        waiting on a device, and jobs in flight — fails through ``done_cb``
+        so the master's retry machinery re-dispatches it elsewhere. The
+        jobs' already-scheduled completions are marked abandoned and
+        become no-ops."""
         self.alive = False
         self.store.mark_dead(self.name)
+        for dev in self.devices.values():
+            for job in list(dev.running) + list(dev.waiting):
+                self._abandon_job(job)
+            dev.running.clear()
+            dev.waiting.clear()
+            dev.active = 0
         for li in self.instances.values():
+            li.outstanding = 0
             for q in li.pending:
                 q.failed = True
                 if q.done_cb:
                     q.done_cb(q)
             li.pending.clear()
+
+    def _abandon_job(self, job: _Job) -> None:
+        """Fail a queued/in-flight job of a dead worker: queries go back
+        to the master's retry path, offline jobs surface failure."""
+        job.abandoned = True
+        if job.offline_job is None:
+            for q in job.queries:
+                q.failed = True
+                if q.done_cb:
+                    q.done_cb(q)
+        else:
+            job.offline_job.failed = True
+            if job.offline_job in self.offline_jobs:
+                self.offline_jobs.remove(job.offline_job)
+            if job.offline_job.done_cb:
+                job.offline_job.done_cb(job.offline_job)

@@ -35,7 +35,9 @@ def _real_engine_demo(arch: str, n_reqs: int, slots: int,
                       page_size: Optional[int] = None,
                       n_pages: Optional[int] = None,
                       chunk_threshold: Optional[int] = None,
-                      stage_slots: int = 0) -> None:
+                      stage_slots: int = 0,
+                      admission: str = "worstcase",
+                      preempt_policy: str = "slack") -> None:
     import time
 
     import jax
@@ -50,7 +52,8 @@ def _real_engine_demo(arch: str, n_reqs: int, slots: int,
     eng = ServingEngine(model, params, max_batch=slots, max_len=64,
                         decode_block=16, page_size=page_size,
                         n_pages=n_pages, chunk_threshold=chunk_threshold,
-                        stage_slots=stage_slots)
+                        stage_slots=stage_slots, admission=admission,
+                        preempt_policy=preempt_policy)
     rng = np.random.default_rng(0)
     reqs = [Request(rid=i,
                     prompt=rng.integers(0, cfg.vocab,
@@ -74,6 +77,7 @@ def _real_engine_demo(arch: str, n_reqs: int, slots: int,
           f"peak {s['peak_concurrency']} slots, "
           f"{s['chunk_admits']} chunked admits, "
           f"{s['inseg_admissions']} in-segment admits, "
+          f"{s['preemptions']} preemptions, "
           f"segment occupancy {eng.occupancy['slot_busy_frac']:.2f})")
 
 
@@ -109,27 +113,44 @@ def main(argv: Optional[Sequence[str]] = None) -> None:
     ap.add_argument("--stage-slots", type=int, default=0,
                     help="in-segment admission: device staging ring "
                          "capacity (0 = boundary-only admission)")
+    ap.add_argument("--admission", choices=["worstcase", "optimistic"],
+                    default="worstcase",
+                    help="paged admission control: reserve worst-case "
+                         "pages up front, or admit on expected usage and "
+                         "preempt under pressure (needs --page-size)")
+    ap.add_argument("--preempt-policy", choices=["slack", "lru"],
+                    default="slack",
+                    help="optimistic-admission victim choice: most SLO "
+                         "slack, or most-recently-admitted (lru)")
     args = ap.parse_args(argv)
 
     if args.n_pages is not None and args.page_size is None:
         raise SystemExit("--n-pages sizes the paged KV pool; it needs "
                          "--page-size (contiguous engines have no pool)")
+    if args.admission == "optimistic" and args.page_size is None:
+        raise SystemExit("--admission optimistic over-commits the paged "
+                         "KV pool; it needs --page-size (contiguous "
+                         "engines reserve whole slots and cannot "
+                         "over-commit)")
     if args.real_engine:
         _real_engine_demo(args.arch, args.real_reqs, args.real_slots,
                           page_size=args.page_size, n_pages=args.n_pages,
                           chunk_threshold=args.chunk_threshold,
-                          stage_slots=args.stage_slots)
+                          stage_slots=args.stage_slots,
+                          admission=args.admission,
+                          preempt_policy=args.preempt_policy)
         return
 
     if args.backend != "real" and (args.page_size is not None
                                    or args.n_pages is not None
                                    or args.chunk_threshold is not None
-                                   or args.stage_slots):
+                                   or args.stage_slots
+                                   or args.admission != "worstcase"):
         raise SystemExit(
-            "--page-size/--n-pages/--chunk-threshold/--stage-slots "
-            "configure the real data plane; combine them with --backend "
-            "real or --real-engine (the sim backend has no KV cache to "
-            "page and no decode loop to refill)")
+            "--page-size/--n-pages/--chunk-threshold/--stage-slots/"
+            "--admission configure the real data plane; combine them "
+            "with --backend real or --real-engine (the sim backend has "
+            "no KV cache to page and no decode loop to refill)")
     if args.backend == "real" and args.arch == "all":
         raise SystemExit("--backend real needs a single --arch "
                          "(each arch builds real model params)")
@@ -140,12 +161,15 @@ def main(argv: Optional[Sequence[str]] = None) -> None:
     if args.backend == "real" and (args.page_size is not None
                                    or args.n_pages is not None
                                    or args.chunk_threshold is not None
-                                   or args.stage_slots):
+                                   or args.stage_slots
+                                   or args.admission != "worstcase"):
         from repro.serving.executor import EngineExecutorConfig
         engine_cfg = EngineExecutorConfig(
             page_size=args.page_size, n_pages=args.n_pages,
             chunk_threshold=args.chunk_threshold,
-            stage_slots=args.stage_slots)
+            stage_slots=args.stage_slots,
+            admission=args.admission,
+            preempt_policy=args.preempt_policy)
     c = make_cluster(n_accel=args.workers, n_cpu=args.cpu_workers,
                      archs=archs, autoscale=not args.no_autoscale, cfg=cfg,
                      backend=args.backend, engine_cfg=engine_cfg)

@@ -16,6 +16,15 @@ boundaries and checkpoint naturally. Attention caches come in two layouts:
   count is no longer bound by worst-case context length — the serving
   engine's page allocator hands pages to slots as their ``pos`` grows.
 
+Page reclaim is safe at any host boundary, including *mid-stream preempts*
+(optimistic admission frees a live victim's pages): pointing the victim's
+block-table row back at the sentinel detaches it from the pool without
+touching neighbors, and a reclaimed page can be handed to another slot
+immediately — its stale contents sit behind the new holder's write
+frontier, and every position is rewritten by the new holder before any
+masked read (``kv_valid_len``) can include it. This is the same argument
+that makes slot reuse exact, applied page-at-a-time.
+
 Recurrent families' O(1) states (SSM, conv tails, xLSTM cells) have no
 sequence axis and stay batch-indexed in either layout.
 """
@@ -25,6 +34,7 @@ from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax import lax
 
 Cache = Dict[str, Any]
@@ -98,6 +108,18 @@ def paged_update_layer_cache(k_pool: jax.Array, v_pool: jax.Array,
     v_pool = v_pool.at[page, off].set(v_new[:, 0].astype(v_pool.dtype),
                                       mode="drop")
     return k_pool, v_pool
+
+
+def sentinel_block_table(n_rows: int, pages_per_slot: int,
+                         n_pages: int) -> np.ndarray:
+    """All-sentinel block table rows (host-side, int32): every entry is
+    ``n_pages`` — one past the pool — so writes drop and masked reads
+    clamp. The serving engine starts every slot here and returns a slot's
+    row here whenever its pages are reclaimed: at sequence finish *and* at
+    preemption, where the request is parked and its pages handed out
+    while it waits (safe per the module docstring's rewrite-before-read
+    argument)."""
+    return np.full((n_rows, pages_per_slot), n_pages, np.int32)
 
 
 def reset_slot_rows(leaf: jax.Array, batch_axis: int, take: jax.Array,

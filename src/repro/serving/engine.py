@@ -103,6 +103,37 @@ host boundary can top it up mid-segment); ``PageAllocator`` tracks these
 staged reservations under per-request tickets that are re-keyed to the
 slot at harvest.
 
+**Optimistic admission + SLO-aware preemption.** Worst-case admission
+(``admission="worstcase"``, the default) reserves every request's full
+``ceil((prompt + max_new - 1) / P)`` pages up front, so the pool is
+chronically under-committed: the decode tail is reserved long before it is
+written, and the only failure mode under pressure is head-of-line
+queueing. ``admission="optimistic"`` admits on *expected* usage instead —
+a prefill request needs its prompt pages now (they are scattered at the
+prefill dispatch) and a chunked request only its first ``decode_block``
+stride — and grows the decode tail lazily. When the pool runs dry at a
+growth point (a live slot's ``pos`` is about to cross a page boundary
+with zero free pages — at the segment-boundary top-up, or because staged
+in-segment refills hold pages), the engine *preempts* instead of wedging:
+staged-but-unstarted requests are un-staged first (zero work lost), then
+a live victim is chosen, its pages freed, and the request parked host-side
+with its prompt plus every token generated so far. Re-admission
+teacher-forces that full prefix through the chunked-prefill path, so
+recovery is **bit-identical** to an uninterrupted run (greedy decode is
+deterministic given the prefix). Victim choice is SLO-aware
+(``preempt_policy="slack"``): each ``Request`` carries its latency
+objective (``slo``), and the engine preempts the request with the most
+slack — deadline minus elapsed minus estimated remaining (segment-time
+EWMA x positions left) — treating no-SLO requests as infinite slack and
+breaking ties toward longest-remaining; ``preempt_policy="lru"`` preempts
+the most recently admitted request instead (vLLM-style recompute).
+Optimistic admission requires the paged layout and a family whose
+teacher-forced decode is exact from the empty state (dense/hybrid/ssm);
+other configurations clamp back to worst-case. ``stats`` counts
+``preemptions``, ``preempt_readmits`` and ``pressure_stalls`` (growth
+points that found the pool dry), and each ``Request`` counts its own
+``preemptions`` so callers can surface a ``degraded`` flag.
+
 **Occupancy accounting.** ``stats`` tracks ``busy_slot_steps`` /
 ``bubble_slot_steps`` (active vs idle slot-steps inside fused segments,
 counted in the loop carry), ``inseg_admissions`` and ``staged``; the
@@ -176,6 +207,20 @@ class Request:
     # wall time the request entered a device slot (prefill, chunked, or
     # in-segment promotion at harvest); admitted - arrival is queue delay
     admitted: float = -1.0
+    # per-query latency objective in seconds (deadline = arrival + slo);
+    # None = best-effort. Drives SLO-aware victim choice under pressure.
+    slo: Optional[float] = None
+    # times this request was preempted (pages freed, parked, prefix
+    # replayed); > 0 lets callers surface a "degraded" flag on results
+    preemptions: int = 0
+
+
+@dataclasses.dataclass
+class _Parked:
+    """A preempted request parked host-side awaiting re-admission."""
+    req: Request
+    prefix: np.ndarray      # prompt + every token generated before preempt
+    done: List[int]         # tokens already generated (re-credited at seat)
 
 
 def bucket_len(n: int, minimum: int = 8, maximum: Optional[int] = None) -> int:
@@ -234,16 +279,31 @@ class PageAllocator:
     def can_reserve(self, n_positions: int) -> bool:
         return self.committed + self.pages_needed(n_positions) <= self.n_pages
 
-    def reserve(self, slot: int, n_positions: int) -> None:
-        """Admit ``slot``: commit its worst-case page count (no pages yet)."""
+    def reserve(self, slot: Any, n_positions: int,
+                strict: bool = True) -> None:
+        """Admit ``slot``: commit its worst-case page count (no pages yet).
+
+        ``strict=False`` (optimistic admission) skips the over-commit
+        check: the engine admits on expected usage, lets ``committed``
+        exceed the pool, and resolves a dry pool by preemption instead of
+        up-front refusal."""
         if slot in self._reserved:
             raise ValueError(f"slot {slot} already live")
         need = self.pages_needed(n_positions)
-        if self.committed + need > self.n_pages:
+        if strict and self.committed + need > self.n_pages:
             raise ValueError(f"over-committed: {self.committed}+{need} "
                              f"> {self.n_pages}")
         self._reserved[slot] = need
         self._pages[slot] = []
+
+    def can_cover(self, holder: Any, n_positions: int) -> bool:
+        """Enough free pages for ``cover(holder, n_positions)``? Always
+        true under worst-case admission (the reservation pre-funds every
+        cover); optimistic admission uses this as its pressure probe."""
+        held = len(self._pages[holder])
+        target = min(self.pages_needed(n_positions),
+                     self._reserved[holder])
+        return target - held <= len(self._free)
 
     def cover(self, slot: int, n_positions: int) -> List[int]:
         """Grow ``slot`` to cover positions [0, n); returns the new pages."""
@@ -280,7 +340,8 @@ class ServingEngine:
                  min_bucket: int = 8, page_size: Optional[int] = None,
                  n_pages: Optional[int] = None,
                  chunk_threshold: Optional[int] = None,
-                 stage_slots: int = 0):
+                 stage_slots: int = 0, admission: str = "worstcase",
+                 preempt_policy: str = "slack"):
         self.model = model
         self.params = params
         self.max_batch = max_batch
@@ -315,6 +376,7 @@ class ServingEngine:
             "chunk_admits": 0, "peak_concurrency": 0,
             "staged": 0, "inseg_admissions": 0,
             "busy_slot_steps": 0, "bubble_slot_steps": 0,
+            "preemptions": 0, "preempt_readmits": 0, "pressure_stalls": 0,
         }
         shapes = model.cache_shapes(max_batch, max_len, enc_len=max_len)
         # Per-leaf batch axis, found by diffing cache shapes at two batch
@@ -351,8 +413,8 @@ class ServingEngine:
                 PageAllocator(self.n_pages, page_size)
             # block-table mirror handed to every device dispatch; the
             # sentinel n_pages drops writes / clamps (masked) reads
-            self._bt = np.full((max_batch, self.pages_per_slot),
-                               self.n_pages, np.int32)
+            self._bt = KV.sentinel_block_table(
+                max_batch, self.pages_per_slot, self.n_pages)
             self._cache = jax.tree.map(
                 lambda s, bax, sax: jnp.zeros(
                     self._pool_shape(s.shape, bax, sax), s.dtype),
@@ -369,6 +431,20 @@ class ServingEngine:
             self._cache = jax.tree.map(
                 lambda s: jnp.zeros(s.shape, s.dtype), shapes)
         self._paged = self._bt is not None
+        # ----- admission discipline -----------------------------------
+        if admission not in ("worstcase", "optimistic"):
+            raise ValueError(f"unknown admission mode {admission!r}")
+        if preempt_policy not in ("slack", "lru"):
+            raise ValueError(f"unknown preempt policy {preempt_policy!r}")
+        # Optimistic admission needs (a) the paged layout — pressure is a
+        # page-pool phenomenon — and (b) a family whose teacher-forced
+        # decode is exact from the empty state, because recovery replays
+        # the preempted prefix through the chunked-prefill seat. Anything
+        # else clamps back to worst-case (forced ``preempt()`` still works
+        # for any chunk-capable family).
+        self.admission = admission if (self._alloc is not None and
+                                       self._chunk_ok) else "worstcase"
+        self.preempt_policy = preempt_policy
         # Per-leaf empty-state rows (batch axis moved to front, batch=1):
         # the slot-reset constant for chunked admission and the fused
         # loop's in-segment refill. Sequence-carrying leaves never need a
@@ -406,6 +482,12 @@ class ServingEngine:
         # slot inside a fused segment; mirrors the device ring each step
         self._staged: deque = deque()
         self._stage_seq = 0
+        # preempted requests parked host-side (``_Parked``), FIFO; they
+        # re-admit ahead of pending work via the chunked-prefill seat
+        self._preempted: deque = deque()
+        # EWMA of per-decode-step wall time: the slack policy's estimate
+        # of a request's remaining service time (positions left x this)
+        self._step_est = 0.0
 
     def _pool_shape(self, dims: Tuple[int, ...], bax: int, sax: int):
         """Contiguous leaf shape -> shared-pool shape: drop the batch axis,
@@ -693,11 +775,15 @@ class ServingEngine:
                     np.zeros((R,), np.int32), np.zeros((R,), np.int32),
                     np.int32(0)]
             if self._paged:
-                args += [self._bt, np.full((R, self.pages_per_slot),
-                                           self.n_pages, np.int32)]
+                args += [self._bt, KV.sentinel_block_table(
+                    R, self.pages_per_slot, self.n_pages)]
             out = fn(*args)
             jax.block_until_ready(out[-1])
-        if self.chunk_threshold is not None and self._chunk_fn is None:
+        if (self.chunk_threshold is not None
+                or self.admission == "optimistic") and \
+                self._chunk_fn is None:
+            # optimistic engines seat preempted prefixes through the chunk
+            # path even with chunking off: compile it out of band too
             fn = self._get_chunk_admit()
             out = fn(self._cache, self._tok, self._pos, self._rem,
                      self._plen, self._pbuf,
@@ -756,21 +842,33 @@ class ServingEngine:
         if new:
             self._bt[slot, held:held + len(new)] = new
 
-    def _chunk_seat(self, r: Request, slot: int) -> None:
-        """Stage ``r``'s prompt in ``slot``'s device prompt buffer and
-        reset the slot's state rows (no prefill dispatch): shared by
-        chunked admission and the boundary fallback that seats staged
-        requests into freed slots."""
-        plen = len(r.prompt)
+    def _seat_prefix(self, slot: int, prefix: np.ndarray,
+                     max_new: int) -> None:
+        """Seat a token prefix in ``slot`` for teacher-forced replay: the
+        prefix goes to the slot's device prompt buffer, the slot's state
+        rows reset to the family's empty state, and the next segments feed
+        it ``decode_block`` tokens per dispatch before emitting ``max_new``
+        greedy tokens. The primitive under chunked admission (prefix ==
+        prompt) and preemption recovery (prefix == prompt + tokens already
+        generated, which makes the continuation bit-identical)."""
+        plen = len(prefix)
         row = np.zeros((1, self.max_len), np.int32)
-        row[0, :plen] = r.prompt
+        row[0, :plen] = prefix
         fn = self._get_chunk_admit()
         (self._cache, self._tok, self._pos, self._rem, self._plen,
          self._pbuf) = fn(
             self._cache, self._tok, self._pos, self._rem, self._plen,
             self._pbuf, np.asarray([slot], np.int32), row,
             np.asarray([plen], np.int32),
-            np.asarray([max(r.max_new_tokens, 1)], np.int32))
+            np.asarray([max(max_new, 1)], np.int32))
+
+    def _chunk_seat(self, r: Request, slot: int) -> None:
+        """Stage ``r``'s prompt in ``slot``'s device prompt buffer and
+        reset the slot's state rows (no prefill dispatch): shared by
+        chunked admission and the boundary fallback that seats staged
+        requests into freed slots."""
+        self._seat_prefix(slot, np.asarray(r.prompt, np.int32),
+                          max(r.max_new_tokens, 1))
 
     def _admit_chunk(self, r: Request, slot: int) -> None:
         """Chunked admission: no prefill dispatch — stage the prompt in
@@ -785,8 +883,9 @@ class ServingEngine:
     @property
     def busy(self) -> bool:
         """True while any request is pending admission, staged for
-        in-segment admission, or mid-decode."""
+        in-segment admission, parked after a preemption, or mid-decode."""
         return bool(self._pending) or bool(self._staged) or \
+            bool(self._preempted) or \
             any(r is not None for r in self._slot_req)
 
     def _validate(self, r: Request) -> None:
@@ -824,6 +923,47 @@ class ServingEngine:
         positions' pages materialized up front — the fused segment that
         pulls them in has no host boundary at which to grow them."""
         now = time.perf_counter()
+        # parked (preempted) requests re-admit ahead of everything else:
+        # they are the oldest admitted work, they hold zero pages while
+        # parked, and seating them first bounds how often the same request
+        # gets re-preempted. Recovery teacher-forces the full prefix
+        # (prompt + tokens already generated) through the chunked-prefill
+        # seat, so the continuation is bit-identical to an uninterrupted
+        # run; tokens generated before the preempt are re-credited to the
+        # slot's emission list rather than regenerated.
+        #
+        # Re-admission is deliberately NOT optimistic: it waits until the
+        # request's full remaining worst case sits in actually-free pages.
+        # Optimistically re-admitting into the still-contended pool that
+        # just evicted it is ping-pong — every bounce replays the whole
+        # prefix (pure waste) before any new token lands. The hysteresis
+        # costs nothing at the peak (initial admits already filled every
+        # slot) and converts preempt-thrash into one park per victim.
+        while self._preempted and self._free:
+            p = self._preempted[0]
+            npos = self._n_positions(p.req)
+            if self._alloc is not None:
+                first = min(npos, self.decode_block)
+                if self.admission == "optimistic":
+                    if self._alloc.pages_needed(npos) > self._alloc.n_free:
+                        break
+                elif not self._alloc.can_reserve(npos):
+                    break
+            self._preempted.popleft()
+            slot = self._free.pop()
+            if self._alloc is not None:
+                self._alloc.reserve(slot, npos,
+                                    strict=self.admission != "optimistic")
+                if self.admission == "optimistic":
+                    # materialize the first stride now so this pass's
+                    # free-page accounting stays exact for the next seat
+                    self._grow_slot(slot, first)
+            self._seat_prefix(slot, p.prefix,
+                              max(p.req.max_new_tokens - len(p.done), 1))
+            self.stats["preempt_readmits"] += 1
+            self._gen[slot] = list(p.done)
+            self._slot_req[slot] = p.req
+            self._slot_pos[slot] = 0
         # boundary fallback: seat already-staged requests into free slots
         # the loop never refilled — a slot can come back without an
         # in-loop admission (e.g. a max_new==1 prefill finishes at
@@ -843,18 +983,39 @@ class ServingEngine:
             self._slot_req[slot] = r
             self._slot_pos[slot] = 0
         prefills: List[Tuple[Request, int]] = []
-        while self._pending and self._free:
+        # no new admissions while preempted work waits: a fresh request
+        # seated now would take the very pages the parked request is
+        # waiting to re-earn (arrival-order inversion + another preempt
+        # cycle). The parked queue drains first, always — its head fits
+        # the pool by the submit()-time validation.
+        while self._pending and self._free and not self._preempted:
             r = self._pending[0]
-            if self._alloc is not None and \
-                    not self._alloc.can_reserve(self._n_positions(r)):
-                break
+            npos = self._n_positions(r)
+            chunked = self.chunk_threshold is not None and \
+                len(r.prompt) > self.chunk_threshold
+            if self._alloc is not None:
+                if self.admission == "optimistic":
+                    # expected usage: a prefill needs its prompt pages at
+                    # the dispatch; a chunked prompt only its first
+                    # decode_block stride. The decode tail grows lazily —
+                    # under pressure the grow path preempts, never wedges.
+                    first = min(npos, self.decode_block) if chunked \
+                        else len(r.prompt)
+                    if self._alloc.pages_needed(first) > self._alloc.n_free:
+                        break
+                elif not self._alloc.can_reserve(npos):
+                    break
             self._pending.popleft()
             slot = self._free.pop()
             if self._alloc is not None:
-                self._alloc.reserve(slot, self._n_positions(r))
+                self._alloc.reserve(slot, npos,
+                                    strict=self.admission != "optimistic")
+                if self.admission == "optimistic":
+                    # cover the expected pages now so this pass's free-page
+                    # accounting stays exact for the next queue head
+                    self._grow_slot(slot, first)
             r.admitted = now
-            if self.chunk_threshold is not None and \
-                    len(r.prompt) > self.chunk_threshold:
+            if chunked:
                 self._admit_chunk(r, slot)
                 self._gen[slot] = []        # first token comes via emit
                 self._slot_req[slot] = r
@@ -878,18 +1039,25 @@ class ServingEngine:
                     self._slot_pos[s] = len(r.prompt)
         # ---- staging ring: queue overflow rides into the segment ------
         while self.stage_slots and self._pending and \
+                not self._preempted and \
                 len(self._staged) < self.stage_slots:
             r = self._pending[0]
             npos = self._n_positions(r)
-            if self._alloc is not None and \
-                    not self._alloc.can_reserve(npos):
-                break                       # FIFO: nothing jumps the line
+            if self._alloc is not None:
+                if self.admission == "optimistic":
+                    if self._alloc.pages_needed(
+                            min(npos, self.decode_block)) > \
+                            self._alloc.n_free:
+                        break
+                elif not self._alloc.can_reserve(npos):
+                    break                   # FIFO: nothing jumps the line
             self._pending.popleft()
             ticket = ("stage", self._stage_seq)
             self._stage_seq += 1
             bt_row = None
             if self._alloc is not None:
-                self._alloc.reserve(ticket, npos)
+                self._alloc.reserve(ticket, npos,
+                                    strict=self.admission != "optimistic")
                 pages = self._alloc.cover(
                     ticket, min(npos, self.decode_block))
                 bt_row = np.full((self.pages_per_slot,), self.n_pages,
@@ -897,6 +1065,94 @@ class ServingEngine:
                 bt_row[:len(pages)] = pages
             self._staged.append((r, ticket, bt_row))
             self.stats["staged"] += 1
+
+    # ------------------------------------------------------------------
+    # preemption: park / pick victim / relieve pressure
+    def _preempt_slot(self, v: int) -> None:
+        """Preempt ``v``'s occupant: free its pages, park the request
+        host-side with its prompt plus every token generated so far, and
+        deactivate the slot on device. Host-boundary only (between
+        dispatches)."""
+        r = self._slot_req[v]
+        done = self._gen.pop(v)[: r.max_new_tokens]
+        prefix = np.concatenate([np.asarray(r.prompt, np.int32),
+                                 np.asarray(done, np.int32)])
+        r.preemptions += 1
+        self.stats["preemptions"] += 1
+        self._slot_req[v] = None
+        self._free.append(v)
+        if self._alloc is not None:
+            self._alloc.release(v)
+            self._bt[v, :] = self.n_pages
+        self._preempted.append(_Parked(r, prefix.astype(np.int32),
+                                       list(done)))
+        # rem == 0 deactivates the slot: the next fused segment neither
+        # advances it, emits for it, nor logs a completion for it (and in
+        # paged mode its sentinel block-table row drops any KV write)
+        self._rem = jnp.asarray(self._rem).at[v].set(0)
+
+    def _pick_victim(self, exclude: int) -> Optional[int]:
+        """Choose a live slot to preempt (never ``exclude``, the slot
+        whose growth triggered the pressure). ``slack`` preempts the
+        request that can best afford the round trip: most slack = deadline
+        minus elapsed minus estimated remaining service (positions left x
+        EWMA step time), no-SLO requests counting as infinite slack, ties
+        broken toward never-yet-preempted then longest-remaining — a slot
+        mid-way through replaying a preempted prefix resets its position
+        counter, so without the preemption-count tie-break it *looks* like
+        the longest-remaining candidate and the same request bounces
+        between park and replay while fresh requests sail through. ``lru``
+        preempts the most recently admitted request (vLLM-style recompute:
+        the youngest has the least work to replay)."""
+        cands = [s for s, r in enumerate(self._slot_req)
+                 if r is not None and s != exclude]
+        if not cands:
+            return None
+        if self.preempt_policy == "lru":
+            return max(cands,
+                       key=lambda s: (self._slot_req[s].admitted, s))
+        now = time.perf_counter()
+
+        def slack(s: int):
+            r = self._slot_req[s]
+            left = max(self._n_positions(r) - int(self._slot_pos[s]), 1)
+            est = left * self._step_est
+            sl = float("inf") if r.slo is None \
+                else (r.arrival + r.slo) - now - est
+            return (sl, -r.preemptions, left, s)
+
+        return max(cands, key=slack)
+
+    def _relieve_pressure(self, protect: int) -> bool:
+        """Free pages under pressure, cheapest first: un-stage the newest
+        staged request (zero work lost — it returns to the head of
+        pending, FIFO preserved), then preempt a live victim. Returns
+        False when nothing is left to free."""
+        if self._staged:
+            r, ticket, _bt_row = self._staged.pop()
+            if self._alloc is not None:
+                self._alloc.release(ticket)
+            self._pending.appendleft(r)
+            return True
+        v = self._pick_victim(exclude=protect)
+        if v is None:
+            return False
+        self._preempt_slot(v)
+        return True
+
+    def preempt(self, slot: int) -> None:
+        """Forcibly preempt the request in ``slot`` (fault injection and
+        tests; the engine preempts on its own under page pressure): park
+        it and free its resources. It re-admits through the teacher-forced
+        replay path with a bit-identical continuation. Call between
+        ``step()`` boundaries only."""
+        if not self._chunk_ok:
+            raise ValueError(
+                f"family {self.model.cfg.family!r} cannot recover a "
+                "preempted request (no teacher-forced replay path)")
+        if not 0 <= slot < self.max_batch or self._slot_req[slot] is None:
+            raise ValueError(f"slot {slot} is not live")
+        self._preempt_slot(slot)
 
     def _retire_slot(self, slot: int, r: Request, now: float) -> None:
         """Finish ``slot``'s current occupant: hand it its tokens, free its
@@ -928,20 +1184,29 @@ class ServingEngine:
         if self._alloc is not None:
             # append pages ahead of the segment: each active slot's pos
             # advances by at most decode_block positions before the next
-            # host boundary (reservation guarantees these never fail)
+            # host boundary. Worst-case reservations pre-fund every cover;
+            # optimistic admission can find the pool dry here, in which
+            # case pressure relief un-stages queued work and then preempts
+            # the slackest victim until the grow fits (it always does
+            # eventually: a lone validated request fits the pool).
             for s, r in enumerate(self._slot_req):
                 if r is None:
                     continue
                 cover = min(int(self._slot_pos[s]) + self.decode_block,
                             self._n_positions(r))
+                if not self._alloc.can_cover(s, cover):
+                    self.stats["pressure_stalls"] += 1
+                    while not self._alloc.can_cover(s, cover):
+                        if not self._relieve_pressure(protect=s):
+                            break
                 self._grow_slot(s, cover)
         decode = self._get_decode()
         R = max(self.stage_slots, 1)
         ring_tok = np.zeros((R, self.max_len), np.int32)
         ring_plen = np.zeros((R,), np.int32)
         ring_new = np.zeros((R,), np.int32)
-        ring_bt = np.full((R, self.pages_per_slot), self.n_pages,
-                          np.int32) if self._paged else None
+        ring_bt = KV.sentinel_block_table(
+            R, self.pages_per_slot, self.n_pages) if self._paged else None
         for j, (r, _ticket, bt_row) in enumerate(self._staged):
             ring_tok[j, :len(r.prompt)] = r.prompt
             ring_plen[j] = len(r.prompt)
@@ -953,6 +1218,7 @@ class ServingEngine:
                 np.int32(len(self._staged))]
         if self._paged:
             args += [self._bt, ring_bt]
+        t_seg = time.perf_counter()
         (self._cache, self._tok, self._pos, self._rem, self._plen,
          self._pbuf, out, comp_slot, comp_step, comp_adm, n_comp,
          busy_steps, n_steps) = decode(*args)
@@ -963,6 +1229,12 @@ class ServingEngine:
         comp_adm = np.asarray(comp_adm)
         n_comp = int(n_comp)
         n_steps = int(n_steps)
+        if n_steps:
+            # EWMA per-step wall time (all slots advance in lockstep):
+            # feeds the slack policy's remaining-service estimate
+            per = (time.perf_counter() - t_seg) / n_steps
+            self._step_est = per if self._step_est == 0.0 \
+                else 0.8 * self._step_est + 0.2 * per
         self._slot_pos = np.asarray(self._pos).astype(np.int64)
         self.stats["decode_steps"] += n_steps
         self.stats["busy_slot_steps"] += int(busy_steps)

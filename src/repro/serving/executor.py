@@ -43,8 +43,13 @@ pass through to the engines: the paged KV data plane, chunked prefill,
 and in-segment admission under the full INFaaS control plane. Each
 ``run()`` appends a record to ``occupancy_log`` — the executor's decision
 log — with the run's fused-segment occupancy (slot-busy fraction,
-in-segment admissions per segment, bubble slot-steps), so the control
-plane can see how densely the data plane is packing its hardware.
+in-segment admissions per segment, bubble slot-steps) and its preemption
+/ pressure-stall counts under optimistic admission, so the control plane
+can see both how densely the data plane is packing its hardware and what
+that packing cost in preempted work. ``ExecRequest.slo`` threads each
+query's latency objective down to the engine's SLO-aware victim choice,
+and ``ExecRequest.on_report`` carries the degradation verdict (was any
+of this query's work preempted?) back up to the worker.
 """
 from __future__ import annotations
 
@@ -80,6 +85,8 @@ class EngineExecutorConfig:
     chunk_threshold: Optional[int] = None  # chunked prefill past this len
     max_engines: Optional[int] = None  # LRU cap on live engines (None = off)
     stage_slots: int = 0              # in-segment admission ring (0 = off)
+    admission: str = "worstcase"      # page admission: worstcase|optimistic
+    preempt_policy: str = "slack"     # pressure victim choice: slack|lru
 
 
 class EngineExecutor:
@@ -153,6 +160,8 @@ class EngineExecutor:
                 min_bucket=self.cfg.min_bucket,
                 chunk_threshold=self.cfg.chunk_threshold,
                 stage_slots=self.cfg.stage_slots,
+                admission=self.cfg.admission,
+                preempt_policy=self.cfg.preempt_policy,
                 **kwargs)
             eng.warmup(prompt_lens=[self.cfg.prompt_len])
         # dict order doubles as the LRU list: reinsert on every access
@@ -184,7 +193,8 @@ class EngineExecutor:
         groups: List[Tuple[ExecRequest, List[Request]]] = []
         occ0 = {k: eng.stats[k] for k in
                 ("busy_slot_steps", "bubble_slot_steps",
-                 "inseg_admissions", "decode_dispatches")}
+                 "inseg_admissions", "decode_dispatches",
+                 "preemptions", "pressure_stalls")}
         t0 = time.perf_counter()
         for er in requests:
             ers: List[Request] = []
@@ -194,13 +204,14 @@ class EngineExecutor:
                         rid=next(self._rid),
                         prompt=np.asarray(p, np.int32),
                         max_new_tokens=max(er.max_new_tokens, 1),
-                        arrival=t0))
+                        arrival=t0, slo=er.slo))
             else:
                 for _ in range(max(er.n_inputs, 1)):
                     ers.append(Request(
                         rid=next(self._rid),
                         prompt=self._synthetic_prompt(vocab),
-                        max_new_tokens=self.cfg.max_new, arrival=t0))
+                        max_new_tokens=self.cfg.max_new, arrival=t0,
+                        slo=er.slo))
             for r in ers:
                 eng.submit(r)
             groups.append((er, ers))
@@ -220,11 +231,20 @@ class EngineExecutor:
             "admissions_per_segment":
                 d["inseg_admissions"] / segs if segs else 0.0,
             "bubble_slot_steps": d["bubble_slot_steps"],
+            "preemptions": d["preemptions"],
+            "pressure_stalls": d["pressure_stalls"],
         })
         for er, ers in groups:
             if er.on_outputs is not None:
                 er.on_outputs([np.asarray(r.tokens, np.int32)
                                for r in ers])
+            if er.on_report is not None:
+                # degradation report back to the control plane: a query
+                # whose requests were preempted (and recovered) completed
+                # degraded — identical tokens, borrowed time
+                npre = sum(r.preemptions for r in ers)
+                er.on_report({"preemptions": npre,
+                              "degraded": npre > 0})
         # only synthetic runs calibrate t(b): they share one fixed
         # (prompt_len, max_new) shape, so duration varies with batch count
         # alone. Payload runs have arbitrary prompt/decode shapes and

@@ -287,7 +287,8 @@ def test_payload_runs_do_not_refit_profiles():
     class _NoRunEngine:
         busy = False
         stats = {"busy_slot_steps": 0, "bubble_slot_steps": 0,
-                 "inseg_admissions": 0, "decode_dispatches": 0}
+                 "inseg_admissions": 0, "decode_dispatches": 0,
+                 "preemptions": 0, "pressure_stalls": 0}
 
         def warmup(self, prompt_lens=()):
             pass

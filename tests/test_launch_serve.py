@@ -56,3 +56,22 @@ def test_launch_sim_backend_rejects_paged_flags():
         serve.main(["--arch", "llama3.2-1b", "--page-size", "8"])
     with pytest.raises(SystemExit, match="real"):
         serve.main(["--arch", "llama3.2-1b", "--chunk-threshold", "16"])
+
+
+def test_launch_optimistic_requires_page_size():
+    """Optimistic admission over-commits the paged pool: without
+    --page-size there is no pool to over-commit."""
+    with pytest.raises(SystemExit, match="page-size"):
+        serve.main(["--arch", "llama3.2-1b", "--real-engine",
+                    "--admission", "optimistic"])
+
+
+def test_launch_real_engine_demo_optimistic_smoke(capsys):
+    """The admission/preempt-policy knobs reach the standalone engine
+    demo: a starved pool forces preemptions and the stream completes."""
+    serve.main(["--real-engine", "--arch", "llama3.2-1b",
+                "--real-reqs", "8", "--real-slots", "4",
+                "--page-size", "8", "--n-pages", "12",
+                "--admission", "optimistic", "--preempt-policy", "slack"])
+    out = capsys.readouterr().out
+    assert "paged 12x8" in out and "preemptions" in out

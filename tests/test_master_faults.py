@@ -1,0 +1,129 @@
+"""Fault-injection hardening for the control plane (ISSUE 6 satellites).
+
+* A worker that silently stops heartbeating mid-job (``Worker.hang()`` —
+  alive but frozen, completions never fire) must not strand its queries:
+  the master's heartbeat sweep routes the timeout through
+  ``Worker.fail()``, so pending *and in-flight* work fails through
+  ``done_cb`` into the retry machinery and finishes elsewhere.
+* Retries back off exponentially with jitter
+  (``retry_delay * retry_backoff**k``, capped at ``retry_delay_cap``)
+  instead of hammering a fixed period, and every dispatch stamps the
+  attempt count the ``QueryResult`` surfaces.
+* Transient failures recover (attempts > 1, query completes); permanent
+  failures exhaust the budget (``max_retries + 1`` attempts) over at
+  least the sum of the backoff schedule.
+"""
+from repro.configs.registry import ARCHS
+from repro.core.api import QuerySpec
+from repro.core.master import MasterConfig
+from repro.sim.cluster import make_cluster
+
+LLAMA = ARCHS["llama3.2-1b"]
+
+
+def _done(q):
+    return q.finish >= 0 and not q.failed
+
+
+def test_hung_worker_queries_redispatch_and_complete():
+    """Regression: a heartbeat-silent (hung, not failed) worker's pending
+    and in-flight queries used to strand forever — the sweep marked the
+    worker dead in the store but never failed its queries, and a hung
+    worker's scheduled completions never fire. They must re-dispatch and
+    complete."""
+    c = make_cluster(n_accel=2, archs=[LLAMA], autoscale=False)
+    c.api.online_query(mod_arch=LLAMA.name, latency_ms=10_000)
+    c.run_until(30.0)
+    qs = [c.api.online_query(mod_arch=LLAMA.name, latency_ms=60_000)
+          for _ in range(32)]
+    victims = [n for n, w in c.master.workers.items()
+               if any(li.pending or li.outstanding
+                      for li in w.instances.values())]
+    assert victims
+    c.master.workers[victims[0]].hang()      # silent: no fail_worker call
+    c.run_until(240.0)
+    done = [q for q in qs if _done(q)]
+    assert len(done) == len(qs), \
+        f"{len(done)}/{len(qs)} completed after silent hang"
+    assert not c.store.workers[victims[0]].alive, \
+        "heartbeat sweep never detected the hung worker"
+    # the stranded queries went around the retry loop at least once
+    assert max(q.attempts for q in qs) > 1
+    assert all(q.attempts >= 1 for q in qs)
+
+
+def test_transient_failure_recovers_with_attempt_count():
+    """An explicit worker failure is transient cluster-wide: the other
+    worker absorbs the re-dispatches, and the retried queries carry
+    attempts > 1 all the way into the public QueryResult."""
+    c = make_cluster(n_accel=2, archs=[LLAMA], autoscale=False)
+    c.api.online_query(mod_arch=LLAMA.name, latency_ms=10_000)
+    c.run_until(30.0)
+    hs = [c.api.submit(QuerySpec.arch(LLAMA.name, latency_ms=60_000))
+          for _ in range(16)]
+    victims = [n for n, w in c.master.workers.items()
+               if any(li.pending or li.outstanding
+                      for li in w.instances.values())]
+    assert victims
+    c.master.fail_worker(victims[0])
+    c.run_until(240.0)
+    results = [h.result(timeout=1.0) for h in hs]
+    assert all(r.ok for r in results)
+    assert max(r.attempts for r in results) > 1
+    assert all(r.attempts >= 1 for r in results)
+
+
+def test_permanent_failure_exhausts_backoff_budget():
+    """With every worker dead, a query burns its full retry budget —
+    max_retries + 1 attempts — spread over at least the deterministic
+    part of the exponential backoff schedule, then fails for good."""
+    cfg = MasterConfig()
+    c = make_cluster(n_accel=1, archs=[LLAMA], autoscale=False, cfg=cfg)
+    c.run_until(10.0)
+    for name in list(c.master.workers):
+        c.master.fail_worker(name)
+    t0 = c.loop.now()
+    q = c.api.online_query(mod_arch=LLAMA.name, latency_ms=5000)
+    c.run_until(t0 + 120.0)
+    assert q.failed
+    assert q.attempts == cfg.max_retries + 1
+    # sum of min(delay * backoff**k, cap) for k = 0..max_retries-1,
+    # jitter can shave at most retry_jitter off each wait
+    sched = sum(min(cfg.retry_delay * cfg.retry_backoff ** k,
+                    cfg.retry_delay_cap) for k in range(cfg.max_retries))
+    assert q.finish - t0 >= sched * (1.0 - cfg.retry_jitter), \
+        (q.finish - t0, sched)
+    assert q.finish - t0 <= sched * (1.0 + cfg.retry_jitter) + 1.0
+
+
+def test_backoff_delays_grow_and_cap():
+    """The per-retry delay schedule is exponential, capped, and jittered
+    within +/- retry_jitter."""
+    cfg = MasterConfig(retry_delay=0.1, retry_backoff=2.0,
+                       retry_delay_cap=0.5, retry_jitter=0.1)
+    c = make_cluster(n_accel=1, archs=[LLAMA], autoscale=False, cfg=cfg)
+    m = c.master
+    for k, base in enumerate([0.1, 0.2, 0.4, 0.5, 0.5, 0.5]):
+        for _ in range(3):
+            d = m._retry_delay_for(k)
+            assert base * 0.9 <= d <= base * 1.1, (k, d, base)
+    # jitter desynchronizes retries: not every draw is identical
+    draws = {round(m._retry_delay_for(3), 6) for _ in range(16)}
+    assert len(draws) > 1
+
+
+def test_hung_worker_offline_job_not_stranded():
+    """Offline jobs on a hung worker fail through the abandon path and
+    re-enter the master's offline retry loop once the sweep fires."""
+    c = make_cluster(n_accel=2, archs=[LLAMA], autoscale=False)
+    c.run_until(10.0)
+    h = c.api.submit(QuerySpec.arch(LLAMA.name, mode="offline",
+                                    n_inputs=64))
+    c.run_until(12.0)
+    hosts = [n for n, w in c.master.workers.items() if w.offline_jobs]
+    if hosts:                       # job already placed: hang its host
+        c.master.workers[hosts[0]].hang()
+    c.run_until(400.0)
+    r = h.result(timeout=1.0)
+    assert r.ok, "offline job stranded on hung worker"
+    assert r.attempts >= 1

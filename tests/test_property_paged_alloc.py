@@ -10,6 +10,14 @@ partially cover) under a per-request ticket before owning a slot, and are
 arbitrary admit/stage/grow/promote/finish interleavings the pool must
 never double-book a page, must conserve ``free + staged + live ==
 n_pages``, and must return every page at drain.
+
+Optimistic admission (graceful degradation under pressure) adds
+``reserve(strict=False)`` — commitments may exceed the pool — plus the
+preempt/re-admit cycle: a victim's pages are released while it parks
+host-side, and re-admission re-reserves under the same discipline. The
+``committed <= n_pages`` invariant intentionally does not hold there;
+everything page-level still must (no double-booking, exact free
+accounting, clean drain).
 """
 import pytest
 
@@ -152,6 +160,88 @@ def test_staged_reservations_invariants(ops, n_pages, page_size, max_slots):
         alloc.release(holder)
     assert alloc.n_free == alloc.n_pages
     assert alloc.committed == 0
+
+
+PREEMPT_OPS = st.lists(
+    st.tuples(st.sampled_from(["admit", "grow", "preempt", "readmit",
+                               "finish"]),
+              st.integers(0, 2**31 - 1), st.integers(1, 96)),
+    min_size=1, max_size=100)
+
+
+@settings(max_examples=150, deadline=None)
+@given(PREEMPT_OPS, st.integers(1, 48), st.integers(1, 16),
+       st.integers(1, 8))
+def test_optimistic_preempt_readmit_invariants(ops, n_pages, page_size,
+                                               max_slots):
+    """The engine's optimistic-admission discipline: reservations are
+    strict=False (over-commit allowed), growth is gated by can_cover
+    (the pressure probe), preemption releases a victim's pages while it
+    parks, and re-admission waits for its full worst case in free pages.
+    No interleaving double-books a page, free accounting stays exact at
+    every step, and the drain returns the whole pool."""
+    alloc = PageAllocator(n_pages, page_size)
+    live = {}                            # holder -> npos
+    parked = []                          # (holder, npos) FIFO
+    next_h = 0
+    for kind, pick, npos in ops:
+        npos = min(npos, n_pages * page_size)    # submit()-time validation
+        if kind == "admit":
+            if len(live) >= max_slots:
+                continue
+            h = ("h", next_h)
+            next_h += 1
+            # expected usage only: first stride must be free, the rest
+            # over-commits
+            if alloc.pages_needed(min(npos, page_size)) > alloc.n_free:
+                continue
+            alloc.reserve(h, npos, strict=False)
+            alloc.cover(h, min(npos, page_size))
+            live[h] = npos
+        elif kind == "grow" and live:
+            h = sorted(live)[pick % len(live)]
+            if alloc.can_cover(h, npos):
+                grown = alloc.cover(h, npos)
+                assert len(alloc.pages_of(h)) <= \
+                    alloc.pages_needed(live[h])
+                assert len(grown) == len(set(grown))
+        elif kind == "preempt" and live:
+            h = sorted(live)[pick % len(live)]
+            pages = alloc.release(h)
+            assert len(pages) == len(set(pages))
+            parked.append((h, live.pop(h)))
+        elif kind == "readmit" and parked:
+            h, want = parked[0]
+            # hysteresis: the full remaining worst case must sit in
+            # actually-free pages (mirrors _admit_pending's parked gate)
+            if alloc.pages_needed(want) > alloc.n_free:
+                continue
+            parked.pop(0)
+            alloc.reserve(h, want, strict=False)
+            alloc.cover(h, min(want, page_size))
+            live[h] = want
+        elif kind == "finish" and live:
+            h = sorted(live)[pick % len(live)]
+            pages = alloc.release(h)
+            del live[h]
+            assert len(pages) == len(set(pages))
+        # page-level invariants hold even while committed > n_pages
+        held = alloc.live_pages()
+        assert len(held) == len(set(held)), "double-booked page"
+        assert alloc.n_free + len(held) == alloc.n_pages
+        for h in live:
+            assert len(alloc.pages_of(h)) <= alloc.pages_needed(live[h])
+    for h in sorted(live):
+        alloc.release(h)
+    assert alloc.n_free == alloc.n_pages
+    assert alloc.committed == 0
+    # every parked holder can eventually re-admit into the drained pool
+    for h, want in parked:
+        assert alloc.pages_needed(want) <= alloc.n_pages
+        alloc.reserve(h, want, strict=False)
+        alloc.cover(h, want)
+        alloc.release(h)
+    assert alloc.n_free == alloc.n_pages
 
 
 @given(st.integers(1, 32), st.integers(1, 8))
