@@ -55,8 +55,21 @@ cost ~2x batch-4 steps, and every preemption replays its prefix — so the
 closed-burst goodput favors worst-case here; on a memory-bound
 accelerator the wider batch is the whole point.)
 
+``--scenario shared_prefix`` drives the prefix-cache comparison
+(-> ``BENCH_engine_shared_prefix.json``): a few long templates (system
+prompts) fan out into many requests with short unique suffixes, served
+twice — once on the plain paged engine, once with ``prefix_cache=True``.
+The cache hashes prompts at page granularity (chained digests), attaches
+already-computed template pages to new slots (refcounted, copy-on-write
+on any write into a shared page), and skips the covered prefill: the
+seat teacher-forces from the first uncached token. Reports prefill
+tokens skipped, hit rate, COW/eviction counts, and the prefill goodput
+win (prompt tokens / tokens actually computed), with outputs checked
+bit-identical against the cache-off engine.
+
 Run:  PYTHONPATH=src python benchmarks/fig_engine_throughput.py \
-          [--scenario classic|long_tail|churn|pressure|all] [--tiny]
+          [--scenario classic|long_tail|churn|pressure|shared_prefix|all] \
+          [--tiny]
 """
 from __future__ import annotations
 
@@ -101,6 +114,21 @@ PR_N_REQS = 32
 PR_PROMPT = (6, 13)
 PR_MAX_NEW = 24
 PR_SLO_FACTOR = 1.5     # slo_i = 1.5x the request's uncontended latency
+
+# shared-prefix scenario (prefix cache vs plain paged). A few long
+# templates (system prompts) fan out into many requests with short
+# unique suffixes: the cache serves every template page from the pool
+# after its first computation, so the prefill work per request collapses
+# to the suffix.
+SP_SLOTS = 8
+SP_PAGE = 8
+SP_MAX_LEN = 64
+SP_N_REQS = 32
+SP_TEMPLATES = 4
+SP_TPL_LEN = 24         # 3 full pages of sharable prefix per template
+SP_SUFFIX = (3, 7)      # unique tail per request
+SP_MAX_NEW = (4, 9)
+SP_STREAMS = 2          # second stream re-hits the drained (cached) pages
 
 # long-tail scenario (paged vs contiguous capacity)
 LT_MAX_LEN = 128        # worst-case context a slot must provision for
@@ -270,6 +298,133 @@ def run_long_tail(verbose: bool = True, tiny: bool = False) -> List[Row]:
         ("engine_longtail_peak_slots_paged",
          float(paged["peak_concurrent_slots"]),
          f"{out['concurrency_gain']:.1f}x concurrency"),
+    ]
+
+
+def _shared_prefix_stream(cfg, seed: int, n_reqs: int, n_templates: int):
+    """Requests fanning out from a few long shared templates."""
+    from repro.serving.engine import Request
+    t_rng = np.random.default_rng(1234)     # templates fixed across seeds
+    tpls = [t_rng.integers(0, cfg.vocab, size=SP_TPL_LEN).astype(np.int32)
+            for _ in range(n_templates)]
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i in range(n_reqs):
+        sfx = rng.integers(0, cfg.vocab,
+                           size=int(rng.integers(*SP_SUFFIX))
+                           ).astype(np.int32)
+        reqs.append(Request(
+            rid=i, prompt=np.concatenate([tpls[i % n_templates], sfx]),
+            max_new_tokens=int(rng.integers(*SP_MAX_NEW))))
+    return reqs
+
+
+def _drive_shared_prefix(engine, streams) -> dict:
+    engine.warmup(prompt_lens=[len(r.prompt)
+                               for reqs in streams for r in reqs])
+    total_new, total_prompt = 0, 0
+    t0 = time.perf_counter()
+    for reqs in streams:
+        engine.serve(reqs)
+        total_new += sum(len(r.tokens) for r in reqs)
+        total_prompt += sum(len(r.prompt) for r in reqs)
+    dt = time.perf_counter() - t0
+    s = engine.stats
+    n_reqs = sum(len(reqs) for reqs in streams)
+    skipped = s.get("prefix_tokens_skipped", 0)
+    return {
+        "wall_s": dt,
+        "toks_per_s": total_new / dt,
+        "prompt_tokens": total_prompt,
+        "prefill_tokens_skipped": skipped,
+        # prefill tokens the engine actually had to compute, vs a
+        # cache-less engine computing all of them
+        "prefill_goodput_win": total_prompt / max(total_prompt - skipped,
+                                                  1),
+        "prefix_hits": s.get("prefix_hits", 0),
+        "hit_rate": s.get("prefix_hits", 0) / n_reqs,
+        "prefix_pages_reused": s.get("prefix_pages_reused", 0),
+        "cow_copies": s.get("cow_copies", 0),
+        "evictions": s.get("evictions", 0),
+        "chunk_admits": s["chunk_admits"],
+        "mean_latency_s": float(np.mean(
+            [r.latency for reqs in streams for r in reqs])),
+    }
+
+
+def run_shared_prefix(verbose: bool = True, tiny: bool = False) -> List[Row]:
+    """Prefix cache (COW page sharing) vs plain paged on a template fan-out
+    workload -> BENCH_engine_shared_prefix.json."""
+    from repro.configs.registry import ARCHS
+    from repro.models import build_model
+    from repro.serving.engine import ServingEngine
+
+    slots = 4 if tiny else SP_SLOTS
+    n_reqs = 8 if tiny else SP_N_REQS
+    n_templates = 2 if tiny else SP_TEMPLATES
+    page = SP_PAGE
+    n_pages = slots * SP_MAX_LEN // page
+
+    cfg = ARCHS["llama3.2-1b"].reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    kw = dict(max_batch=slots, max_len=SP_MAX_LEN, decode_block=8,
+              page_size=page, n_pages=n_pages, chunk_threshold=16)
+
+    def streams():
+        return [_shared_prefix_stream(cfg, seed, n_reqs, n_templates)
+                for seed in range(SP_STREAMS)]
+
+    base_streams = streams()
+    base = _drive_shared_prefix(ServingEngine(model, params, **kw),
+                                base_streams)
+    pref_streams = streams()
+    pref = _drive_shared_prefix(
+        ServingEngine(model, params, prefix_cache=True, **kw),
+        pref_streams)
+
+    outputs_match = all(
+        bool(np.array_equal(a.tokens, b.tokens))
+        for sa, sb in zip(base_streams, pref_streams)
+        for a, b in zip(sa, sb))
+    out = {
+        "workload": {
+            "n_requests": n_reqs * SP_STREAMS, "slots": slots,
+            "templates": n_templates, "template_len": SP_TPL_LEN,
+            "suffix_len": f"{SP_SUFFIX[0]}..{SP_SUFFIX[1] - 1}",
+            "max_new": f"{SP_MAX_NEW[0]}..{SP_MAX_NEW[1] - 1}",
+            "streams": SP_STREAMS, "arch": cfg.name,
+            "backend": jax.default_backend(), "tiny": tiny,
+        },
+        "pool": {"page_size": page, "n_pages": n_pages},
+        "paged_no_cache": base,
+        "paged_prefix_cache": pref,
+        "outputs_match": outputs_match,
+        "speedup_toks": pref["toks_per_s"] / base["toks_per_s"],
+        "prefill_goodput_win": pref["prefill_goodput_win"],
+    }
+    path = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "BENCH_engine_shared_prefix.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2)
+    if verbose:
+        for name, r in (("paged_no_cache", base),
+                        ("paged_prefix_cache", pref)):
+            print(f"# {name}: {r['toks_per_s']:.0f} tok/s | "
+                  f"{r['prefill_tokens_skipped']}/{r['prompt_tokens']} "
+                  f"prefill tokens skipped | hit rate {r['hit_rate']:.2f} "
+                  f"| {r['cow_copies']} COW | {r['evictions']} evictions")
+        print(f"# prefix cache: {out['prefill_goodput_win']:.2f}x prefill "
+              f"goodput, {out['speedup_toks']:.2f}x tok/s, outputs "
+              f"bit-identical: {outputs_match} -> {path}")
+    return [
+        ("engine_shared_prefix_tok_s_paged", base["toks_per_s"],
+         "baseline"),
+        ("engine_shared_prefix_tok_s_cached", pref["toks_per_s"],
+         f"{out['speedup_toks']:.2f}x"),
+        ("engine_shared_prefix_goodput_win", pref["prefill_goodput_win"],
+         f"hit rate {pref['hit_rate']:.2f}, "
+         f"bit-identical={outputs_match}"),
     ]
 
 
@@ -590,7 +745,7 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--scenario",
                     choices=["classic", "long_tail", "churn", "pressure",
-                             "all"],
+                             "shared_prefix", "all"],
                     default="all")
     ap.add_argument("--tiny", action="store_true",
                     help="small shapes for CI smoke runs")
@@ -603,3 +758,5 @@ if __name__ == "__main__":
         run_churn(tiny=args.tiny)
     if args.scenario in ("pressure", "all"):
         run_pressure(tiny=args.tiny)
+    if args.scenario in ("shared_prefix", "all"):
+        run_shared_prefix(tiny=args.tiny)

@@ -15,6 +15,21 @@ layout (``repro.models.kvcache``): the KV tile for grid step ``j`` of slot
 pool, resolved in the BlockSpec index map from a scalar-prefetched block
 table — the page indirection costs no extra HBM pass, and per-slot valid
 lengths ride in a second prefetched scalar.
+
+``fused_paged_decode_attention`` additionally folds the token's KV *write*
+into the same kernel: the new k/v row is injected into the write page's
+tile in VMEM before the scores are computed, and the updated page is
+flushed back through an aliased pool output — the separate per-step XLA
+pool scatter (and its read-modify-write pass over the pool) disappears
+from the decode loop. The pool output's BlockSpec pins every grid step of
+a (slot, head) pair to that slot's single write page, so exactly one
+store (at the write page's logical block) defines the flushed content.
+Safety relies on two invariants the serving engine maintains: a written
+page is private to its slot (copy-on-write guarantees refcount 1), and
+the pool carries one extra *trash page* at index ``n_pages - 1`` — equal
+to the block table's sentinel value — so writes by inactive slots land
+harmlessly in a page no block table references for live reads (stale
+trash contents sit behind ``valid_len`` and mask to exact zeros).
 """
 from __future__ import annotations
 
@@ -207,3 +222,148 @@ def paged_decode_attention(q: jax.Array, k_pool: jax.Array,
         out_shape=jax.ShapeDtypeStruct((B, K, G, D), q.dtype),
         interpret=interpret,
     )(valid_len, bt, q, k_pool, v_pool)
+
+
+def _fused_paged_decode_kernel(vlen_ref, wblk_ref, woff_ref, bt_ref,
+                               q_ref, kn_ref, vn_ref, kp_ref, vp_ref,
+                               o_ref, ko_ref, vo_ref,
+                               m_scr, l_scr, acc_scr, *,
+                               page_size: int, n_t_blocks: int,
+                               sm_scale: float):
+    b = pl.program_id(0)
+    tj = pl.program_id(2)
+
+    @pl.when(tj == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    t_start = tj * page_size
+    valid_len = vlen_ref[b]
+    is_w = tj == wblk_ref[b]
+
+    # Inject the new token's k/v row into this tile when it is the write
+    # block, then attend over the *updated* tile: the row is visible to
+    # the very score pass that needs it (valid_len == pos + 1 covers it)
+    # without ever round-tripping HBM.
+    sel = (lax.broadcasted_iota(jnp.int32, (page_size, 1), 0)
+           == woff_ref[b]) & is_w
+    k = jnp.where(sel, kn_ref[0, 0].astype(jnp.float32),
+                  kp_ref[0, :, 0].astype(jnp.float32))     # (ps, D)
+    v = jnp.where(sel, vn_ref[0, 0].astype(jnp.float32),
+                  vp_ref[0, :, 0].astype(jnp.float32))
+
+    @pl.when(is_w)
+    def _flush():
+        # the pool outputs' index maps pin every j of this (b, h) to the
+        # write page, so this single store is what the one flush carries
+        ko_ref[0, :, 0] = k.astype(ko_ref.dtype)
+        vo_ref[0, :, 0] = v.astype(vo_ref.dtype)
+
+    @pl.when(t_start < valid_len)
+    def _step():
+        q = q_ref[0, 0].astype(jnp.float32)          # (G, D)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * sm_scale
+        t_idx = t_start + lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(t_idx < valid_len, s, NEG_INF)  # (G, ps)
+        m_prev = m_scr[...]                          # (G, 1)
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jnp.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(tj == n_t_blocks - 1)
+    def _finish():
+        lsum = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / lsum).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def fused_paged_decode_attention(q: jax.Array, k_new: jax.Array,
+                                 v_new: jax.Array, k_pool: jax.Array,
+                                 v_pool: jax.Array, block_table: jax.Array,
+                                 pos: jax.Array, *, interpret: bool = False):
+    """One-token paged decode with the KV write fused into the kernel.
+
+    q: (B, K, G, D); k_new/v_new: (B, K, D) — the token's fresh k/v rows;
+    k_pool/v_pool: (n_phys, page_size, K, D); block_table: (B, P);
+    pos: scalar or (B,) — the position being written (and attended up to,
+    inclusive: valid length is ``pos + 1``).
+
+    **Pool contract** (the serving engine's pallas-paged layout): the pool
+    carries one trash page at the top, ``n_phys == sentinel + 1`` with
+    every sentinel block-table entry equal to ``n_phys - 1``, so inactive
+    slots' writes land in the trash page instead of needing per-slot
+    write suppression; and a written page is referenced by exactly one
+    slot (the engine copies shared pages on write).
+
+    Returns ``(out, k_pool', v_pool')`` with ``out``: (B, K, G, D); the
+    pools are updated in place (aliased).
+    """
+    B, K, G, D = q.shape
+    n_phys, page_size = k_pool.shape[:2]
+    P = block_table.shape[1]
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
+    vlen = pos + 1
+    wblk = jnp.clip(pos // page_size, 0, P - 1)
+    woff = pos % page_size
+    bt = jnp.clip(block_table.astype(jnp.int32), 0, n_phys - 1)
+    kn = k_new.reshape(B, K, 1, D)
+    vn = v_new.reshape(B, K, 1, D)
+
+    kernel = functools.partial(_fused_paged_decode_kernel,
+                               page_size=page_size, n_t_blocks=P,
+                               sm_scale=D ** -0.5)
+    grid = (B, K, P)
+    out_shapes = (
+        jax.ShapeDtypeStruct((B, K, G, D), q.dtype),
+        jax.ShapeDtypeStruct(k_pool.shape, k_pool.dtype),
+        jax.ShapeDtypeStruct(v_pool.shape, v_pool.dtype),
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=4,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, G, D),
+                             lambda b, h, j, vl, wb, wo, bt: (b, h, 0, 0)),
+                pl.BlockSpec((1, 1, 1, D),
+                             lambda b, h, j, vl, wb, wo, bt: (b, h, 0, 0)),
+                pl.BlockSpec((1, 1, 1, D),
+                             lambda b, h, j, vl, wb, wo, bt: (b, h, 0, 0)),
+                pl.BlockSpec((1, page_size, 1, D),
+                             lambda b, h, j, vl, wb, wo, bt:
+                             (bt[b, j], 0, h, 0)),
+                pl.BlockSpec((1, page_size, 1, D),
+                             lambda b, h, j, vl, wb, wo, bt:
+                             (bt[b, j], 0, h, 0)),
+            ],
+            out_specs=[
+                pl.BlockSpec((1, 1, G, D),
+                             lambda b, h, j, vl, wb, wo, bt: (b, h, 0, 0)),
+                pl.BlockSpec((1, page_size, 1, D),
+                             lambda b, h, j, vl, wb, wo, bt:
+                             (bt[b, wb[b]], 0, h, 0)),
+                pl.BlockSpec((1, page_size, 1, D),
+                             lambda b, h, j, vl, wb, wo, bt:
+                             (bt[b, wb[b]], 0, h, 0)),
+            ],
+            scratch_shapes=[
+                pltpu.VMEM((G, 1), jnp.float32),
+                pltpu.VMEM((G, 1), jnp.float32),
+                pltpu.VMEM((G, D), jnp.float32),
+            ],
+        ),
+        out_shape=out_shapes,
+        # pools are donated: inputs 7/8 of (vlen, wblk, woff, bt, q, kn,
+        # vn, k_pool, v_pool) become outputs 1/2 — the kernel rewrites
+        # only each slot's private write page (plus the trash page)
+        input_output_aliases={7: 1, 8: 2},
+        interpret=interpret,
+    )(vlen, wblk, woff, bt, q, kn, vn, k_pool, v_pool)

@@ -37,7 +37,9 @@ def _real_engine_demo(arch: str, n_reqs: int, slots: int,
                       chunk_threshold: Optional[int] = None,
                       stage_slots: int = 0,
                       admission: str = "worstcase",
-                      preempt_policy: str = "slack") -> None:
+                      preempt_policy: str = "slack",
+                      prefix_cache: bool = False,
+                      prefix_evict: str = "lru") -> None:
     import time
 
     import jax
@@ -53,12 +55,24 @@ def _real_engine_demo(arch: str, n_reqs: int, slots: int,
                         decode_block=16, page_size=page_size,
                         n_pages=n_pages, chunk_threshold=chunk_threshold,
                         stage_slots=stage_slots, admission=admission,
-                        preempt_policy=preempt_policy)
+                        preempt_policy=preempt_policy,
+                        prefix_cache=prefix_cache,
+                        prefix_evict=prefix_evict)
     rng = np.random.default_rng(0)
-    reqs = [Request(rid=i,
-                    prompt=rng.integers(0, cfg.vocab,
-                                        size=int(rng.integers(4, 29))
-                                        ).astype(np.int32),
+    # with the prefix cache on, give the stream something to share: half
+    # the requests open with a common template (a system prompt stand-in)
+    tpl = (rng.integers(0, cfg.vocab, size=24).astype(np.int32)
+           if prefix_cache else None)
+
+    def _prompt(i):
+        body = rng.integers(0, cfg.vocab,
+                            size=int(rng.integers(4, 29))).astype(np.int32)
+        if tpl is not None and i % 2 == 0:
+            # stay inside max_len 64 with max_new up to 32
+            return np.concatenate([tpl, body])[:32]
+        return body
+
+    reqs = [Request(rid=i, prompt=_prompt(i),
                     max_new_tokens=int(rng.integers(4, 33)))
             for i in range(n_reqs)]
     eng.warmup(prompt_lens=[len(r.prompt) for r in reqs])
@@ -79,6 +93,12 @@ def _real_engine_demo(arch: str, n_reqs: int, slots: int,
           f"{s['inseg_admissions']} in-segment admits, "
           f"{s['preemptions']} preemptions, "
           f"segment occupancy {eng.occupancy['slot_busy_frac']:.2f})")
+    if eng._prefix is not None:
+        print(f"  prefix cache: {s['prefix_hits']} hits, "
+              f"{s['prefix_pages_reused']} pages reused, "
+              f"{s['prefix_tokens_skipped']} prefill tokens skipped, "
+              f"{s['cow_copies']} COW copies, "
+              f"{s['evictions']} evictions")
 
 
 def main(argv: Optional[Sequence[str]] = None) -> None:
@@ -122,6 +142,14 @@ def main(argv: Optional[Sequence[str]] = None) -> None:
                     default="slack",
                     help="optimistic-admission victim choice: most SLO "
                          "slack, or most-recently-admitted (lru)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="share common prompt prefixes at page "
+                         "granularity across requests (copy-on-write; "
+                         "needs --page-size)")
+    ap.add_argument("--prefix-evict", choices=["lru", "fifo"],
+                    default="lru",
+                    help="which unreferenced cached page the pool "
+                         "reclaims first when it runs dry")
     args = ap.parse_args(argv)
 
     if args.n_pages is not None and args.page_size is None:
@@ -132,25 +160,33 @@ def main(argv: Optional[Sequence[str]] = None) -> None:
                          "KV pool; it needs --page-size (contiguous "
                          "engines reserve whole slots and cannot "
                          "over-commit)")
+    if args.prefix_cache and args.page_size is None:
+        raise SystemExit("--prefix-cache shares prompt prefixes at page "
+                         "granularity; it needs --page-size (contiguous "
+                         "slot rows have no pages to share)")
     if args.real_engine:
         _real_engine_demo(args.arch, args.real_reqs, args.real_slots,
                           page_size=args.page_size, n_pages=args.n_pages,
                           chunk_threshold=args.chunk_threshold,
                           stage_slots=args.stage_slots,
                           admission=args.admission,
-                          preempt_policy=args.preempt_policy)
+                          preempt_policy=args.preempt_policy,
+                          prefix_cache=args.prefix_cache,
+                          prefix_evict=args.prefix_evict)
         return
 
     if args.backend != "real" and (args.page_size is not None
                                    or args.n_pages is not None
                                    or args.chunk_threshold is not None
                                    or args.stage_slots
-                                   or args.admission != "worstcase"):
+                                   or args.admission != "worstcase"
+                                   or args.prefix_cache):
         raise SystemExit(
             "--page-size/--n-pages/--chunk-threshold/--stage-slots/"
-            "--admission configure the real data plane; combine them "
-            "with --backend real or --real-engine (the sim backend has "
-            "no KV cache to page and no decode loop to refill)")
+            "--admission/--prefix-cache configure the real data plane; "
+            "combine them with --backend real or --real-engine (the sim "
+            "backend has no KV cache to page and no decode loop to "
+            "refill)")
     if args.backend == "real" and args.arch == "all":
         raise SystemExit("--backend real needs a single --arch "
                          "(each arch builds real model params)")
@@ -162,14 +198,17 @@ def main(argv: Optional[Sequence[str]] = None) -> None:
                                    or args.n_pages is not None
                                    or args.chunk_threshold is not None
                                    or args.stage_slots
-                                   or args.admission != "worstcase"):
+                                   or args.admission != "worstcase"
+                                   or args.prefix_cache):
         from repro.serving.executor import EngineExecutorConfig
         engine_cfg = EngineExecutorConfig(
             page_size=args.page_size, n_pages=args.n_pages,
             chunk_threshold=args.chunk_threshold,
             stage_slots=args.stage_slots,
             admission=args.admission,
-            preempt_policy=args.preempt_policy)
+            preempt_policy=args.preempt_policy,
+            prefix_cache=args.prefix_cache,
+            prefix_evict=args.prefix_evict)
     c = make_cluster(n_accel=args.workers, n_cpu=args.cpu_workers,
                      archs=archs, autoscale=not args.no_autoscale, cfg=cfg,
                      backend=args.backend, engine_cfg=engine_cfg)

@@ -142,6 +142,72 @@ def reset_slot_rows(leaf: jax.Array, batch_axis: int, take: jax.Array,
     return jnp.moveaxis(arr, 0, batch_axis)
 
 
+def gather_pool_view(pool: jax.Array, block_table: jax.Array,
+                     batch_axis: int, seq_axis: int) -> jax.Array:
+    """Materialize a contiguous-layout leaf from a paged pool leaf.
+
+    ``pool`` is a pool-shaped leaf whose page axis sits at ``seq_axis - 1``
+    and whose in-page offset axis at ``seq_axis`` (the engine's
+    ``_pool_shape`` puts them where the contiguous leaf's sequence axis
+    was, after dropping the batch axis). The result has the batch axis at
+    ``batch_axis`` and a ``P * page_size`` sequence axis at ``seq_axis`` —
+    exactly the contiguous-layout leaf shape, so a decode loop can run the
+    *contiguous* update/attend program over it. Sentinel block-table
+    entries clamp to the last page; their positions always sit at or past
+    the caller's ``kv_valid_len`` and mask to exact zeros downstream.
+    """
+    pa = seq_axis - 1
+    pool2 = jnp.moveaxis(pool, (pa, pa + 1), (0, 1))     # (n_pages, ps, ..)
+    bt = jnp.clip(block_table, 0, pool.shape[pa] - 1)
+    pages = jnp.take(pool2, bt, axis=0)                  # (B, P, ps, ..)
+    B, P = block_table.shape
+    view = pages.reshape((B, P * pool.shape[pa + 1]) + pool2.shape[2:])
+    return jnp.moveaxis(view, (0, 1), (batch_axis, seq_axis))
+
+
+def scatter_pool_view(pool: jax.Array, view: jax.Array,
+                      block_table: jax.Array, batch_axis: int,
+                      seq_axis: int, start: jax.Array,
+                      stop: jax.Array) -> jax.Array:
+    """Write positions ``[start[b], stop[b])`` of each slot's contiguous
+    view back into the paged pool through the block table.
+
+    The inverse of :func:`gather_pool_view`, restricted to the span a
+    decode segment actually wrote: the fused loop decodes on the gathered
+    view and flushes only ``[segment entry pos, exit pos)`` per slot, so
+    pages the slot no longer owns (released mid-segment) and pages it
+    shares read-only with other slots (prefix cache) are never touched.
+    Positions routed to sentinel entries drop, as with the per-step
+    scatter path.
+    """
+    pa = seq_axis - 1
+    n_pages, ps = pool.shape[pa], pool.shape[pa + 1]
+    v2 = jnp.moveaxis(view, (batch_axis, seq_axis), (0, 1))   # (B, S, ..)
+    B, S = v2.shape[:2]
+    poss = jnp.arange(S, dtype=jnp.int32)[None, :]            # (1, S)
+    in_range = (start[:, None] <= poss) & (poss < stop[:, None])
+    blk = jnp.clip(poss // ps, 0, block_table.shape[1] - 1)
+    page = jnp.take_along_axis(block_table,
+                               jnp.broadcast_to(blk, (B, S)), axis=1)
+    page = jnp.where(in_range, page, n_pages)                 # drop rest
+    off = jnp.broadcast_to(poss % ps, (B, S))
+    pool2 = jnp.moveaxis(pool, (pa, pa + 1), (0, 1))
+    pool2 = pool2.at[page, off].set(v2.astype(pool2.dtype), mode="drop")
+    return jnp.moveaxis(pool2, (0, 1), (pa, pa + 1))
+
+
+def copy_pool_page(pool: jax.Array, src: jax.Array, dst: jax.Array,
+                   seq_axis: int) -> jax.Array:
+    """Copy one physical page of a pool leaf (``src`` -> ``dst``), page
+    axis at ``seq_axis - 1``: the device half of copy-on-write, run when a
+    cache-hit admission must rewrite a position inside a shared page."""
+    pa = seq_axis - 1
+    pool2 = jnp.moveaxis(pool, pa, 0)
+    row = lax.dynamic_index_in_dim(pool2, src, axis=0, keepdims=False)
+    pool2 = pool2.at[dst].set(row, mode="drop")
+    return jnp.moveaxis(pool2, 0, pa)
+
+
 def gather_block_kv(pool: jax.Array, block_table: jax.Array) -> jax.Array:
     """Materialize each slot's logical KV view from the shared pool.
 

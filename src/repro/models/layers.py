@@ -374,6 +374,45 @@ def paged_attention_core(
                           kv_valid_len=kv_valid_len, impl="xla")
 
 
+def paged_update_attend(
+    q: jax.Array,                 # (B, 1, K, G, D) one decode token per slot
+    k: jax.Array,                 # (B, 1, K, D) the token's fresh k/v rows
+    v: jax.Array,
+    k_pool: jax.Array,            # (n_phys, page_size, K, D) shared pool
+    v_pool: jax.Array,
+    block_table: jax.Array,       # (B, P) page ids, sentinel = n_phys - 1
+    pos: Any,                     # scalar or (B,) write position per slot
+    *,
+    impl: str = "xla",
+) -> tuple:
+    """One decode step's paged KV write + attend; returns (o, k_pool,
+    v_pool).
+
+    On the Pallas path both halves run in one fused kernel
+    (``fused_paged_decode_attention``): the new row is injected into the
+    write page's VMEM tile before the scores see it and the page flushes
+    back through an aliased output, so the decode loop carries no
+    separate XLA pool scatter. This requires the engine's pallas-paged
+    pool layout (one trash page at the sentinel index, written pages
+    private to their slot — see the kernel's docstring). The XLA path
+    keeps the two-op form (scatter with sentinel drop, then the gathered
+    masked attend), which is bit-identical to the contiguous layout.
+    """
+    from repro.models import kvcache as KV
+    if impl.startswith("pallas") and q.shape[1] == 1:
+        from repro.kernels.decode_attention import \
+            fused_paged_decode_attention
+        o, k_pool, v_pool = fused_paged_decode_attention(
+            q[:, 0], k[:, 0], v[:, 0], k_pool, v_pool, block_table, pos,
+            interpret=impl == "pallas_interpret")
+        return o[:, None], k_pool, v_pool
+    k_pool, v_pool = KV.paged_update_layer_cache(
+        k_pool, v_pool, k, v, block_table, pos)
+    o = paged_attention_core(q, k_pool, v_pool, block_table,
+                             kv_valid_len=pos + 1, impl=impl)
+    return o, k_pool, v_pool
+
+
 def attn_params_init(rng, d_model: int, n_heads: int, n_kv: int, head_dim: int,
                      dtype) -> Params:
     ks = jax.random.split(rng, 4)

@@ -294,9 +294,8 @@ def decode_moe(cfg: ArchConfig, params: Params, cache, token: jax.Array, pos,
                                  kv_valid_len=pos + 1,
                                  impl=cfg.attention_impl)
         else:
-            kc, vc = KV.paged_update_layer_cache(kc, vc, k, v, bt, pos)
-            o = L.paged_attention_core(q, kc, vc, bt, kv_valid_len=pos + 1,
-                                       impl=cfg.attention_impl)
+            o, kc, vc = L.paged_update_attend(q, k, v, kc, vc, bt, pos,
+                                              impl=cfg.attention_impl)
         out = carry + L.attn_out(o, blk["attn"])
         out = out + moe_ffn(L.rmsnorm(out, blk["ln2"]), blk["moe"], cfg,
                             parallel)

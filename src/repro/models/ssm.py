@@ -428,9 +428,8 @@ def decode_zamba(cfg: ArchConfig, params: Params, cache, token: jax.Array,
                                  kv_valid_len=pos + 1,
                                  impl=cfg.attention_impl)
         else:
-            kc, vc = KV.paged_update_layer_cache(kc, vc, k, v, bt, pos)
-            o = L.paged_attention_core(q, kc, vc, bt, kv_valid_len=pos + 1,
-                                       impl=cfg.attention_impl)
+            o, kc, vc = L.paged_update_attend(q, k, v, kc, vc, bt, pos,
+                                              impl=cfg.attention_impl)
         c = c + L.attn_out(o, shared["attn"])
         c = c + L.swiglu(L.rmsnorm(c, shared["ln2"]), shared["mlp"])
         return c, kc, vc

@@ -214,9 +214,8 @@ def _decode_block(x, blk, kc, vc, pos, cfg: ArchConfig, bt=None):
         o = L.attention_core(q, kc, vc, causal=False, kv_valid_len=pos + 1,
                              impl=cfg.attention_impl)
     else:
-        kc, vc = KV.paged_update_layer_cache(kc, vc, k, v, bt, pos)
-        o = L.paged_attention_core(q, kc, vc, bt, kv_valid_len=pos + 1,
-                                   impl=cfg.attention_impl)
+        o, kc, vc = L.paged_update_attend(q, k, v, kc, vc, bt, pos,
+                                          impl=cfg.attention_impl)
     x = x + L.attn_out(o, blk["attn"])
     x = x + L.swiglu(L.rmsnorm(x, blk["ln2"]), blk["mlp"])
     return x, kc, vc

@@ -247,6 +247,20 @@ class PageAllocator:
     Invariants (pinned by the hypothesis property test): no page is ever
     held by two live holders, ``free + staged + live == n_pages`` at all
     times, and a full drain returns every page to the free list.
+
+    **Prefix sharing** relaxes "no page held by two holders" into
+    refcounting: ``attach()`` points an additional holder at pages some
+    other holder (or the prefix cache) already owns, ``release()``
+    decrements and only a count of zero returns the page — either to the
+    free list or, when the ``retain`` hook claims it (the prefix cache
+    retains pages it has indexed), to a *cached* pool of reclaimable
+    rc==0 pages. ``cover()`` and ``cow()`` fall back to evicting a cached
+    page (``evict_choice`` picks, ``on_evict`` notifies the index) when
+    the free list runs dry, so caching never reduces usable capacity.
+    The sharing-era invariants, pinned by the extended property test:
+    ``free + cached + unique_live == n_pages``, a page's refcount equals
+    the number of holders listing it, and eviction only ever takes rc==0
+    pages.
     """
 
     def __init__(self, n_pages: int, page_size: int):
@@ -257,6 +271,17 @@ class PageAllocator:
         self._free: List[int] = list(range(n_pages))[::-1]
         self._pages: Dict[Any, List[int]] = {}     # holder -> held page ids
         self._reserved: Dict[Any, int] = {}        # holder -> worst case
+        self._refcnt: Dict[int, int] = {}          # page -> live holders
+        self._cached: Dict[int, None] = {}         # rc==0 retained pages
+        # prefix-cache seams (all optional): ``retain(page) -> bool``
+        # claims an rc==0 page for the cached pool instead of the free
+        # list; ``evict_choice() -> page`` picks which cached page to
+        # reclaim under free-list pressure; ``on_evict(page)`` tells the
+        # index the page's contents are about to be overwritten.
+        self.retain = None
+        self.evict_choice = None
+        self.on_evict = None
+        self.evictions = 0
 
     def pages_needed(self, n_positions: int) -> int:
         return max(0, -(-int(n_positions) // self.page_size))
@@ -269,6 +294,19 @@ class PageAllocator:
     @property
     def n_free(self) -> int:
         return len(self._free)
+
+    @property
+    def n_cached(self) -> int:
+        """rc==0 pages retained by the prefix cache (reclaimable)."""
+        return len(self._cached)
+
+    @property
+    def n_avail(self) -> int:
+        """Pages a cover/cow can actually obtain: free + evictable."""
+        return len(self._free) + len(self._cached)
+
+    def refcount(self, page: int) -> int:
+        return self._refcnt.get(page, 0)
 
     def live_pages(self) -> List[int]:
         return [p for pages in self._pages.values() for p in pages]
@@ -297,13 +335,40 @@ class PageAllocator:
         self._pages[slot] = []
 
     def can_cover(self, holder: Any, n_positions: int) -> bool:
-        """Enough free pages for ``cover(holder, n_positions)``? Always
-        true under worst-case admission (the reservation pre-funds every
-        cover); optimistic admission uses this as its pressure probe."""
+        """Enough obtainable pages for ``cover(holder, n_positions)``?
+        Always true under worst-case admission (the reservation pre-funds
+        every cover); optimistic admission uses this as its pressure
+        probe. Cached rc==0 pages count — they evict on demand."""
         held = len(self._pages[holder])
         target = min(self.pages_needed(n_positions),
                      self._reserved[holder])
-        return target - held <= len(self._free)
+        return target - held <= self.n_avail
+
+    def _grab(self) -> int:
+        """One physical page at rc==1: the free list first, then evict a
+        cached page (rc==0 by construction, so eviction never frees a
+        page any live holder references)."""
+        if not self._free:
+            page = (self.evict_choice() if self.evict_choice
+                    else next(iter(self._cached)))
+            del self._cached[page]
+            if self.on_evict is not None:
+                self.on_evict(page)
+            self.evictions += 1
+            self._refcnt[page] = 1
+            return page
+        page = self._free.pop()
+        self._refcnt[page] = 1
+        return page
+
+    def _deref(self, page: int) -> None:
+        self._refcnt[page] -= 1
+        if self._refcnt[page] == 0:
+            del self._refcnt[page]
+            if self.retain is not None and self.retain(page):
+                self._cached[page] = None
+            else:
+                self._free.append(page)
 
     def cover(self, slot: int, n_positions: int) -> List[int]:
         """Grow ``slot`` to cover positions [0, n); returns the new pages."""
@@ -311,16 +376,43 @@ class PageAllocator:
         target = min(self.pages_needed(n_positions), self._reserved[slot])
         grown = []
         while len(held) < target:
-            page = self._free.pop()
+            page = self._grab()
             grown.append(page)
             held.append(page)
         return grown
 
+    def attach(self, holder: Any, pages: Sequence[int]) -> None:
+        """Point ``holder`` at pages already resident elsewhere (a prefix
+        cache hit): each page's refcount grows by one, cached rc==0 pages
+        come back live, and the pages count toward the holder's
+        reservation exactly like pages it covered itself."""
+        held = self._pages[holder]
+        for p in pages:
+            if p in self._cached:
+                del self._cached[p]
+            self._refcnt[p] = self._refcnt.get(p, 0) + 1
+            held.append(p)
+
+    def cow(self, holder: Any, idx: int) -> Tuple[int, int]:
+        """Copy-on-write ``holder``'s ``idx``-th page: grab a private
+        page at rc==1, swap it into the holder's list, and drop the
+        holder's reference to the shared original. Returns ``(shared,
+        private)``; the caller copies the page's device contents."""
+        held = self._pages[holder]
+        old = held[idx]
+        new = self._grab()
+        held[idx] = new
+        self._deref(old)
+        return old, new
+
     def release(self, slot: int) -> List[int]:
-        """Free all of ``slot``'s pages (sequence finished)."""
+        """Drop all of ``slot``'s page references (sequence finished or
+        preempted). Pages nobody else references return to the pool —
+        free list, or the prefix cache's cached set when indexed."""
         pages = self._pages.pop(slot)
         del self._reserved[slot]
-        self._free.extend(pages)
+        for p in pages:
+            self._deref(p)
         return pages
 
     def rekey(self, old: Any, new: Any) -> None:
@@ -332,6 +424,109 @@ class PageAllocator:
         self._pages[new] = self._pages.pop(old)
 
 
+class PrefixCache:
+    """Host-side prefix index over the shared KV page pool.
+
+    Prompts are hashed at page granularity with a *chained* digest:
+    ``h_i = sha1(h_{i-1} || tokens[i*ps : (i+1)*ps])``, so a page's hash
+    commits to every token before it and equal chains imply equal
+    logical prefixes (sha1 collisions aside — python ``hash()`` would
+    serve wrong tokens on collision, a cryptographic digest won't).
+    ``register()`` maps a chain digest to the physical page holding that
+    page's KV once the page is fully written with prompt tokens;
+    ``lookup()`` walks a new prompt's chain and returns the longest run
+    of fully-indexed pages, which admission attaches to the new slot's
+    block table (refcounted — the pages are never written by the sharer;
+    a write landing inside a shared page triggers copy-on-write first).
+
+    Pages stay indexed while live (rc >= 1) and move to the allocator's
+    *cached* pool when their last holder releases them; a cached page is
+    reclaimed (and unindexed, via ``on_evict``) only when the free list
+    runs dry. ``policy="lru"`` evicts the page whose last release is
+    oldest; ``policy="fifo"`` evicts in registration order.
+    """
+
+    def __init__(self, alloc: PageAllocator, page_size: int,
+                 policy: str = "lru"):
+        if policy not in ("lru", "fifo"):
+            raise ValueError(f"unknown prefix eviction policy {policy!r}")
+        self._alloc = alloc
+        self.page_size = page_size
+        self.policy = policy
+        self._index: Dict[bytes, int] = {}       # chain digest -> page
+        self._hash_of: Dict[int, bytes] = {}     # page -> chain digest
+        self._reg_seq: Dict[int, int] = {}       # page -> registration no.
+        self._seq = 0
+        alloc.retain = self._retain
+        alloc.on_evict = self._on_evict
+        alloc.evict_choice = self._evict_choice
+
+    # ---- allocator seams --------------------------------------------
+    def _retain(self, page: int) -> bool:
+        return page in self._hash_of
+
+    def _on_evict(self, page: int) -> None:
+        h = self._hash_of.pop(page)
+        del self._index[h]
+        del self._reg_seq[page]
+
+    def _evict_choice(self) -> int:
+        cached = self._alloc._cached
+        if self.policy == "fifo":
+            return min(cached, key=lambda p: self._reg_seq[p])
+        return next(iter(cached))       # dict order == release recency
+
+    # ---- hashing ----------------------------------------------------
+    def chain(self, tokens: np.ndarray) -> List[bytes]:
+        """Chained page digests of every *full* page of ``tokens``."""
+        import hashlib
+        ps = self.page_size
+        toks = np.ascontiguousarray(np.asarray(tokens), np.int32)
+        h, out = b"", []
+        for i in range(len(toks) // ps):
+            h = hashlib.sha1(h + toks[i * ps:(i + 1) * ps].tobytes()) \
+                .digest()
+            out.append(h)
+        return out
+
+    # ---- index ------------------------------------------------------
+    def lookup(self, tokens: np.ndarray) -> List[int]:
+        """Longest indexed page run covering a prefix of ``tokens``."""
+        pages = []
+        for h in self.chain(tokens):
+            page = self._index.get(h)
+            if page is None:
+                break
+            pages.append(page)
+        return pages
+
+    def register(self, digests: Sequence[bytes],
+                 pages: Sequence[int]) -> None:
+        """Index ``pages[i]`` (fully written with the tokens digest
+        ``digests[i]`` commits to) for future lookups. A digest already
+        indexed keeps its first page — two slots racing the same prompt
+        each keep their private copy; one gets shared from now on."""
+        for h, p in zip(digests, pages):
+            if h in self._index or p in self._hash_of:
+                continue
+            self._index[h] = p
+            self._hash_of[p] = h
+            self._reg_seq[p] = self._seq
+            self._seq += 1
+
+    def unindex(self, page: int) -> None:
+        """Drop ``page`` from the index (it is about to be written in
+        place by its sole holder); it re-registers — same digest, same
+        contents — once the holder's writes are flushed."""
+        h = self._hash_of.pop(page, None)
+        if h is not None:
+            del self._index[h]
+            del self._reg_seq[page]
+
+    def __len__(self) -> int:
+        return len(self._index)
+
+
 class ServingEngine:
     """Continuous-batching engine over one model + params (greedy decode)."""
 
@@ -341,7 +536,8 @@ class ServingEngine:
                  n_pages: Optional[int] = None,
                  chunk_threshold: Optional[int] = None,
                  stage_slots: int = 0, admission: str = "worstcase",
-                 preempt_policy: str = "slack"):
+                 preempt_policy: str = "slack",
+                 prefix_cache: bool = False, prefix_evict: str = "lru"):
         self.model = model
         self.params = params
         self.max_batch = max_batch
@@ -377,6 +573,8 @@ class ServingEngine:
             "staged": 0, "inseg_admissions": 0,
             "busy_slot_steps": 0, "bubble_slot_steps": 0,
             "preemptions": 0, "preempt_readmits": 0, "pressure_stalls": 0,
+            "prefix_hits": 0, "prefix_pages_reused": 0, "cow_copies": 0,
+            "evictions": 0, "prefix_tokens_skipped": 0,
         }
         shapes = model.cache_shapes(max_batch, max_len, enc_len=max_len)
         # Per-leaf batch axis, found by diffing cache shapes at two batch
@@ -408,11 +606,20 @@ class ServingEngine:
             pageable = any(s != -1 for s in jax.tree.leaves(self._seq_axes))
         else:
             pageable = False
+        attn_impl = getattr(model.cfg, "attention_impl", "xla")
         if pageable:
             self._alloc: Optional[PageAllocator] = \
                 PageAllocator(self.n_pages, page_size)
             # block-table mirror handed to every device dispatch; the
-            # sentinel n_pages drops writes / clamps (masked) reads
+            # sentinel n_pages drops writes / clamps (masked) reads.
+            # The fused Pallas update+attend kernel has no write
+            # suppression: instead the pool carries one extra *trash*
+            # page at physical index n_pages — exactly the sentinel
+            # value — so inactive slots' writes land there harmlessly.
+            # The XLA/view path keeps the exact-size pool (scatter uses
+            # drop semantics).
+            self._pool_pages = self.n_pages + \
+                (1 if attn_impl.startswith("pallas") else 0)
             self._bt = KV.sentinel_block_table(
                 max_batch, self.pages_per_slot, self.n_pages)
             self._cache = jax.tree.map(
@@ -426,6 +633,7 @@ class ServingEngine:
             if page_size is None:
                 self.pages_per_slot = 0
                 self.n_pages = 0
+            self._pool_pages = 0
             self._alloc = None
             self._bt = None
             self._cache = jax.tree.map(
@@ -445,6 +653,41 @@ class ServingEngine:
         self.admission = admission if (self._alloc is not None and
                                        self._chunk_ok) else "worstcase"
         self.preempt_policy = preempt_policy
+        # ----- prefix cache -------------------------------------------
+        # Page-granular prefix sharing needs (a) the paged layout, (b)
+        # the teacher-forced seat (a hit resumes the prompt at its first
+        # uncached token), and (c) *every* cache leaf position-addressable
+        # — an O(1) recurrent state (SSM/conv cells, hybrid's ssm layers)
+        # summarizes the whole prefix and cannot be recovered from shared
+        # KV pages, so those families clamp the knob off and stay exact.
+        all_paged = all(s != -1 for s in jax.tree.leaves(self._seq_axes))
+        self._prefix: Optional[PrefixCache] = None
+        if prefix_cache and self._paged and self._chunk_ok and all_paged:
+            self._prefix = PrefixCache(self._alloc, page_size,
+                                       policy=prefix_evict)
+        # per-slot registration frontier: prompt pages [0, _reg_upto[s])
+        # of slot s are already indexed; the chain digests of the slot's
+        # seated token row are precomputed at seat time
+        self._reg_upto = np.zeros((max_batch,), np.int64)
+        self._seat_digests: List[List[bytes]] = [[] for _ in
+                                                 range(max_batch)]
+        # ----- device mirrors -----------------------------------------
+        # The decode segment gathers each slot's KV view from the page
+        # pool once at entry and scatters the written span back at exit
+        # (XLA layouts), so the per-step loop body is the *contiguous*
+        # program: paged indirection costs two transfers per segment
+        # instead of two gathers per step. Pallas attention instead runs
+        # a fused update+attend kernel over the pool (see
+        # kernels.decode_attention.fused_paged_decode_attention).
+        self._view_decode = self._paged and \
+            not attn_impl.startswith("pallas")
+        # block-table upload coalescing: the device copy is invalidated
+        # only when a host-side write actually changes self._bt, so
+        # steady-state segments reuse the resident array
+        self._bt_dev = None
+        # idle staging ring reuse: when nothing is staged the ring args
+        # are all-zero / all-sentinel constants — upload them once
+        self._ring0 = None
         # Per-leaf empty-state rows (batch axis moved to front, batch=1):
         # the slot-reset constant for chunked admission and the fused
         # loop's in-segment refill. Sequence-carrying leaves never need a
@@ -469,6 +712,7 @@ class ServingEngine:
         self._prefill_fns: Dict[int, Any] = {}
         self._decode_fn = None
         self._chunk_fn = None
+        self._cow_fn = None
         # open-loop state: persists across submit()/step() calls so
         # requests can arrive while earlier ones are mid-decode
         self._pending: deque = deque()
@@ -497,7 +741,7 @@ class ServingEngine:
             return dims
         assert bax < sax, (dims, bax, sax)
         return (dims[:bax] + dims[bax + 1:sax]
-                + (self.n_pages, self.page_size) + dims[sax + 1:])
+                + (self._pool_pages, self.page_size) + dims[sax + 1:])
 
     def _n_positions(self, r: Request) -> int:
         """KV positions a request writes over its lifetime: the prompt plus
@@ -589,12 +833,17 @@ class ServingEngine:
             return self._chunk_fn
         baxes, saxes = self._batch_axes, self._seq_axes
         reset_rows = self._reset_rows
+        max_len = self.max_len
 
         n_slots = self.max_batch
 
         def chunk_admit(cache, tok, pos, rem, plen, pbuf, slot, row,
-                        plen_v, max_new):
-            # slot/plen_v/max_new: (1,); row: (1, max_len)
+                        plen_v, max_new, start):
+            # slot/plen_v/max_new/start: (1,); row: (1, max_len). start
+            # is the first position the seat actually feeds: 0 for plain
+            # chunked admission and preemption replay, the first uncached
+            # token for a prefix-cache hit (the covered prefix's KV is
+            # already resident in the slot's attached pages).
             self.stats["chunk_traces"] += 1
             # KV leaves need no reset: a position is always rewritten by
             # this slot before any masked read can include it. O(1) state
@@ -608,8 +857,10 @@ class ServingEngine:
                     leaf if sax != -1
                     else KV.reset_slot_rows(leaf, bax, take, empty_row),
                 cache, baxes, saxes, reset_rows)
-            tok = tok.at[slot].set(row[:, :1])
-            pos = pos.at[slot].set(jnp.zeros((1,), jnp.int32))
+            first = jnp.take_along_axis(
+                row, jnp.clip(start, 0, max_len - 1)[:, None], axis=1)
+            tok = tok.at[slot].set(first)
+            pos = pos.at[slot].set(start)
             rem = rem.at[slot].set(max_new)
             plen = plen.at[slot].set(plen_v)
             pbuf = pbuf.at[slot].set(row)
@@ -623,6 +874,7 @@ class ServingEngine:
             return self._decode_fn
         model, steps, slots = self.model, self.decode_block, self.max_batch
         paged, max_len = self._paged, self.max_len
+        view = self._view_decode
         R = max(self.stage_slots, 1)      # device ring capacity (static)
         max_comps = slots + R             # completion-log capacity
         baxes, saxes = self._batch_axes, self._seq_axes
@@ -637,6 +889,24 @@ class ServingEngine:
             # ring_bt: (R, pages_per_slot) pre-reserved block-table rows.
             self.stats["decode_traces"] += 1
             slot_ids = jnp.arange(slots, dtype=jnp.int32)
+            pool = cache
+            if view:
+                # Segment-resident views (XLA attention): gather each
+                # slot's contiguous KV view from the page pool once, run
+                # the *contiguous* decode program over it for the whole
+                # segment, and scatter only the written span [entry pos,
+                # exit pos) back through the (final) block table at exit.
+                # Per-step paged indirection — a pool gather plus a pool
+                # scatter per layer per token — disappears from the loop
+                # body entirely, which is what closes the paged tok/s
+                # gap; the in-loop math is bit-identical to the
+                # contiguous engine because it *is* the same program on
+                # the same shapes.
+                bt0 = jnp.asarray(bt)
+                cache = jax.tree.map(
+                    lambda leaf, bax, sax: leaf if sax == -1
+                    else KV.gather_pool_view(leaf, bt0, bax, sax),
+                    pool, baxes, saxes)
 
             def cond(st):
                 return (st["i"] < steps) & jnp.any(st["rem"] > 0)
@@ -647,9 +917,10 @@ class ServingEngine:
                 plen, pbuf = st["plen"], st["pbuf"]
                 bt_c = st.get("bt")
                 active = rem > 0
-                dcache = dict(cache, bt=bt_c) if paged else cache
+                dcache = dict(cache, bt=bt_c) if (paged and not view) \
+                    else cache
                 logits, dcache = model.decode(params, dcache, tok, pos)
-                if paged:
+                if paged and not view:
                     dcache = {k: v for k, v in dcache.items() if k != "bt"}
                 cache = dcache
                 nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
@@ -707,6 +978,13 @@ class ServingEngine:
                     new["bt"] = jnp.where(adm[:, None],
                                           jnp.take(ring_bt, src, axis=0),
                                           bt_c)
+                if view:
+                    # a refilled slot restarts at position 0: its whole
+                    # written span flushes through the ring's block-table
+                    # row at exit (the previous occupant's in-view tail
+                    # is never written back — its pages are released at
+                    # harvest and may already be re-handed)
+                    new["seg"] = jnp.where(adm, 0, st["seg"])
                 return new
 
             st0 = dict(i=jnp.int32(0), cache=cache, tok=tok, pos=pos,
@@ -719,8 +997,23 @@ class ServingEngine:
                        n_comp=jnp.int32(0), busy=jnp.int32(0))
             if paged:
                 st0["bt"] = jnp.asarray(bt)
+            if view:
+                st0["seg"] = pos
             st = lax.while_loop(cond, body, st0)
-            return (st["cache"], st["tok"], st["pos"], st["rem"],
+            out_cache = st["cache"]
+            if view:
+                # flush each slot's written span back to the page pool
+                # through its *final* block table (in-segment refills
+                # switched rows mid-loop); sentinel rows drop, so
+                # preempted/idle slots touch nothing
+                out_cache = jax.tree.map(
+                    lambda pool_leaf, view_leaf, bax, sax:
+                        view_leaf if sax == -1
+                        else KV.scatter_pool_view(
+                            pool_leaf, view_leaf, st["bt"], bax, sax,
+                            st["seg"], st["pos"]),
+                    pool, out_cache, baxes, saxes)
+            return (out_cache, st["tok"], st["pos"], st["rem"],
                     st["plen"], st["pbuf"], st["out"], st["comp_slot"],
                     st["comp_step"], st["comp_adm"], st["n_comp"],
                     st["busy"], st["i"])
@@ -780,16 +1073,19 @@ class ServingEngine:
             out = fn(*args)
             jax.block_until_ready(out[-1])
         if (self.chunk_threshold is not None
-                or self.admission == "optimistic") and \
+                or self.admission == "optimistic"
+                or self._prefix is not None) and \
                 self._chunk_fn is None:
             # optimistic engines seat preempted prefixes through the chunk
-            # path even with chunking off: compile it out of band too
+            # path even with chunking off, and prefix-cache hits seat
+            # through it too: compile it out of band in both cases
             fn = self._get_chunk_admit()
             out = fn(self._cache, self._tok, self._pos, self._rem,
                      self._plen, self._pbuf,
                      np.full((1,), self.max_batch, np.int32),
                      np.zeros((1, self.max_len), np.int32),
-                     np.zeros((1,), np.int32), np.zeros((1,), np.int32))
+                     np.zeros((1,), np.int32), np.zeros((1,), np.int32),
+                     np.zeros((1,), np.int32))
             jax.block_until_ready(out[1])
 
     def _page_rows_for(self, bucket: int) -> int:
@@ -833,7 +1129,51 @@ class ServingEngine:
          firsts) = fn(*args)
         self.stats["prefill_dispatches"] += 1
         self.stats["admitted"] += m
+        if self._prefix is not None:
+            for r, s in zip(rs, slots):
+                self._seat_digests[s] = self._prefix.chain(r.prompt)
+                self._reg_upto[s] = 0
         return np.asarray(firsts)[:m]
+
+    def _lookup_attach(self, slot: int,
+                       tokens: np.ndarray) -> Optional[int]:
+        """Prefix-cache lookup for a request about to be seated in
+        ``slot`` (which already holds its reservation): attach the hit
+        pages to the slot's block table (refcounted) and return the
+        teacher-forcing start position — the first uncached token — or
+        ``None`` on a miss.
+
+        When the hit covers every full page of the prompt, the seat
+        still rewrites position ``plen - 1`` (its logits produce the
+        first output token), which lands *inside* the last shared page:
+        that page is copy-on-write duplicated first — unless this slot
+        is its only holder, in which case it is written in place and
+        unindexed until the rewrite lands (no sharer can appear mid-
+        flight, keeping "no write to a page with refcount > 1" exact).
+        """
+        if self._prefix is None:
+            return None
+        hit = self._prefix.lookup(tokens)
+        if not hit:
+            return None
+        ps = self.page_size
+        plen = len(tokens)
+        self._alloc.attach(slot, hit)
+        self._bt[slot, :len(hit)] = hit
+        self._bt_dev = None
+        start = min(len(hit) * ps, plen - 1)
+        if len(hit) * ps >= plen:
+            if self._alloc.refcount(hit[-1]) > 1:
+                old, new = self._alloc.cow(slot, len(hit) - 1)
+                self._bt[slot, len(hit) - 1] = new
+                self._copy_page(old, new)
+                self.stats["cow_copies"] += 1
+            else:
+                self._prefix.unindex(hit[-1])
+        self.stats["prefix_hits"] += 1
+        self.stats["prefix_pages_reused"] += len(hit)
+        self.stats["prefix_tokens_skipped"] += start
+        return start
 
     def _grow_slot(self, slot: int, n_positions: int) -> None:
         """Extend ``slot``'s block table to cover positions [0, n)."""
@@ -841,16 +1181,37 @@ class ServingEngine:
         new = self._alloc.cover(slot, n_positions)
         if new:
             self._bt[slot, held:held + len(new)] = new
+            self._bt_dev = None
+
+    def _copy_page(self, src: int, dst: int) -> None:
+        """Device half of copy-on-write: duplicate physical page ``src``
+        into ``dst`` across every paged cache leaf (one jitted scatter,
+        page ids traced so all copies share the executable)."""
+        if self._cow_fn is None:
+            saxes = self._seq_axes
+
+            def cow_copy(cache, s, d):
+                return jax.tree.map(
+                    lambda leaf, sax: leaf if sax == -1
+                    else KV.copy_pool_page(leaf, s, d, sax),
+                    cache, saxes)
+
+            self._cow_fn = jax.jit(cow_copy)
+        self._cache = self._cow_fn(self._cache, np.int32(src),
+                                   np.int32(dst))
 
     def _seat_prefix(self, slot: int, prefix: np.ndarray,
-                     max_new: int) -> None:
+                     max_new: int, start: int = 0) -> None:
         """Seat a token prefix in ``slot`` for teacher-forced replay: the
         prefix goes to the slot's device prompt buffer, the slot's state
         rows reset to the family's empty state, and the next segments feed
         it ``decode_block`` tokens per dispatch before emitting ``max_new``
         greedy tokens. The primitive under chunked admission (prefix ==
         prompt) and preemption recovery (prefix == prompt + tokens already
-        generated, which makes the continuation bit-identical)."""
+        generated, which makes the continuation bit-identical). A
+        prefix-cache hit passes ``start`` > 0: positions [0, start) are
+        already resident in the slot's attached pages, so the feed starts
+        at the first uncached token."""
         plen = len(prefix)
         row = np.zeros((1, self.max_len), np.int32)
         row[0, :plen] = prefix
@@ -860,7 +1221,11 @@ class ServingEngine:
             self._cache, self._tok, self._pos, self._rem, self._plen,
             self._pbuf, np.asarray([slot], np.int32), row,
             np.asarray([plen], np.int32),
-            np.asarray([max(max_new, 1)], np.int32))
+            np.asarray([max(max_new, 1)], np.int32),
+            np.asarray([start], np.int32))
+        if self._prefix is not None:
+            self._seat_digests[slot] = self._prefix.chain(prefix)
+            self._reg_upto[slot] = 0
 
     def _chunk_seat(self, r: Request, slot: int) -> None:
         """Stage ``r``'s prompt in ``slot``'s device prompt buffer and
@@ -943,27 +1308,33 @@ class ServingEngine:
             p = self._preempted[0]
             npos = self._n_positions(p.req)
             if self._alloc is not None:
-                first = min(npos, self.decode_block)
                 if self.admission == "optimistic":
-                    if self._alloc.pages_needed(npos) > self._alloc.n_free:
+                    if self._alloc.pages_needed(npos) > self._alloc.n_avail:
                         break
                 elif not self._alloc.can_reserve(npos):
                     break
             self._preempted.popleft()
             slot = self._free.pop()
+            start = None
             if self._alloc is not None:
                 self._alloc.reserve(slot, npos,
                                     strict=self.admission != "optimistic")
+                # the victim's registered prompt pages went to the cached
+                # pool when it was preempted, so re-admission usually
+                # re-hits the cache and replays only the uncached tail
+                start = self._lookup_attach(slot, p.prefix)
                 if self.admission == "optimistic":
                     # materialize the first stride now so this pass's
                     # free-page accounting stays exact for the next seat
-                    self._grow_slot(slot, first)
+                    self._grow_slot(slot, min(npos, (start or 0)
+                                              + self.decode_block))
             self._seat_prefix(slot, p.prefix,
-                              max(p.req.max_new_tokens - len(p.done), 1))
+                              max(p.req.max_new_tokens - len(p.done), 1),
+                              start=start or 0)
             self.stats["preempt_readmits"] += 1
             self._gen[slot] = list(p.done)
             self._slot_req[slot] = p.req
-            self._slot_pos[slot] = 0
+            self._slot_pos[slot] = start or 0
         # boundary fallback: seat already-staged requests into free slots
         # the loop never refilled — a slot can come back without an
         # in-loop admission (e.g. a max_new==1 prefill finishes at
@@ -976,6 +1347,7 @@ class ServingEngine:
             if self._alloc is not None:
                 self._alloc.rekey(ticket, slot)
                 self._bt[slot, :] = bt_row
+                self._bt_dev = None
             r.admitted = now
             self._chunk_seat(r, slot)
             self.stats["admitted"] += 1
@@ -997,25 +1369,50 @@ class ServingEngine:
                 if self.admission == "optimistic":
                     # expected usage: a prefill needs its prompt pages at
                     # the dispatch; a chunked prompt only its first
-                    # decode_block stride. The decode tail grows lazily —
-                    # under pressure the grow path preempts, never wedges.
-                    first = min(npos, self.decode_block) if chunked \
-                        else len(r.prompt)
-                    if self._alloc.pages_needed(first) > self._alloc.n_free:
+                    # decode_block stride; a prefix-cache hit only the
+                    # stride past its cached pages (estimated here, +1
+                    # for a possible copy-on-write page). The decode tail
+                    # grows lazily — under pressure the grow path
+                    # preempts, never wedges.
+                    hit_est = len(self._prefix.lookup(r.prompt)) \
+                        if self._prefix is not None else 0
+                    if hit_est:
+                        first = min(npos, hit_est * self.page_size
+                                    + self.decode_block)
+                        need = self._alloc.pages_needed(first) \
+                            - hit_est + 1
+                    else:
+                        first = min(npos, self.decode_block) if chunked \
+                            else len(r.prompt)
+                        need = self._alloc.pages_needed(first)
+                    if need > self._alloc.n_avail:
                         break
                 elif not self._alloc.can_reserve(npos):
                     break
             self._pending.popleft()
             slot = self._free.pop()
+            start = None
             if self._alloc is not None:
                 self._alloc.reserve(slot, npos,
                                     strict=self.admission != "optimistic")
+                start = self._lookup_attach(slot, r.prompt)
                 if self.admission == "optimistic":
                     # cover the expected pages now so this pass's free-page
                     # accounting stays exact for the next queue head
+                    if start is not None:
+                        first = min(npos, start + self.decode_block)
                     self._grow_slot(slot, first)
             r.admitted = now
-            if chunked:
+            if start is not None:
+                # cache hit: the covered prefill is skipped entirely —
+                # the seat teacher-forces from the first uncached token
+                self._seat_prefix(slot, np.asarray(r.prompt, np.int32),
+                                  max(r.max_new_tokens, 1), start=start)
+                self.stats["admitted"] += 1
+                self._gen[slot] = []        # first token comes via emit
+                self._slot_req[slot] = r
+                self._slot_pos[slot] = start
+            elif chunked:
                 self._admit_chunk(r, slot)
                 self._gen[slot] = []        # first token comes via emit
                 self._slot_req[slot] = r
@@ -1047,7 +1444,7 @@ class ServingEngine:
                 if self.admission == "optimistic":
                     if self._alloc.pages_needed(
                             min(npos, self.decode_block)) > \
-                            self._alloc.n_free:
+                            self._alloc.n_avail:
                         break
                 elif not self._alloc.can_reserve(npos):
                     break                   # FIFO: nothing jumps the line
@@ -1082,8 +1479,12 @@ class ServingEngine:
         self._slot_req[v] = None
         self._free.append(v)
         if self._alloc is not None:
+            # shared pages only lose this slot's reference; the victim's
+            # registered prompt pages stay indexed (cached once idle), so
+            # its re-admission usually re-hits the prefix cache
             self._alloc.release(v)
             self._bt[v, :] = self.n_pages
+            self._bt_dev = None
         self._preempted.append(_Parked(r, prefix.astype(np.int32),
                                        list(done)))
         # rem == 0 deactivates the slot: the next fused segment neither
@@ -1164,9 +1565,11 @@ class ServingEngine:
         self.stats["tokens_generated"] += len(r.tokens)
         self._slot_req[slot] = None
         if self._alloc is not None:
-            # pages return to the pool the moment a sequence ends
+            # pages return to the pool the moment a sequence ends (the
+            # prefix cache retains any it has indexed, rc permitting)
             self._alloc.release(slot)
             self._bt[slot, :] = self.n_pages
+            self._bt_dev = None
         self._completed.append(r)
 
     def step(self) -> int:
@@ -1202,22 +1605,41 @@ class ServingEngine:
                 self._grow_slot(s, cover)
         decode = self._get_decode()
         R = max(self.stage_slots, 1)
-        ring_tok = np.zeros((R, self.max_len), np.int32)
-        ring_plen = np.zeros((R,), np.int32)
-        ring_new = np.zeros((R,), np.int32)
-        ring_bt = KV.sentinel_block_table(
-            R, self.pages_per_slot, self.n_pages) if self._paged else None
-        for j, (r, _ticket, bt_row) in enumerate(self._staged):
-            ring_tok[j, :len(r.prompt)] = r.prompt
-            ring_plen[j] = len(r.prompt)
-            ring_new[j] = max(r.max_new_tokens, 1)
-            if ring_bt is not None:
-                ring_bt[j] = bt_row
+        if self._staged:
+            ring_tok = np.zeros((R, self.max_len), np.int32)
+            ring_plen = np.zeros((R,), np.int32)
+            ring_new = np.zeros((R,), np.int32)
+            ring_bt = KV.sentinel_block_table(
+                R, self.pages_per_slot, self.n_pages) if self._paged \
+                else None
+            for j, (r, _ticket, bt_row) in enumerate(self._staged):
+                ring_tok[j, :len(r.prompt)] = r.prompt
+                ring_plen[j] = len(r.prompt)
+                ring_new[j] = max(r.max_new_tokens, 1)
+                if ring_bt is not None:
+                    ring_bt[j] = bt_row
+        else:
+            # empty-ring steady state: reuse one device-resident zero
+            # ring instead of re-uploading fresh host arrays per segment
+            if self._ring0 is None:
+                self._ring0 = (
+                    jnp.zeros((R, self.max_len), jnp.int32),
+                    jnp.zeros((R,), jnp.int32),
+                    jnp.zeros((R,), jnp.int32),
+                    jnp.asarray(KV.sentinel_block_table(
+                        R, self.pages_per_slot, self.n_pages))
+                    if self._paged else None)
+            ring_tok, ring_plen, ring_new, ring_bt = self._ring0
         args = [self.params, self._cache, self._tok, self._pos, self._rem,
                 self._plen, self._pbuf, ring_tok, ring_plen, ring_new,
                 np.int32(len(self._staged))]
         if self._paged:
-            args += [self._bt, ring_bt]
+            # the block table rides to the device only when a host-side
+            # write actually changed it (admission, growth, preemption,
+            # COW); steady-state segments reuse the resident copy
+            if self._bt_dev is None:
+                self._bt_dev = jnp.asarray(self._bt)
+            args += [self._bt_dev, ring_bt]
         t_seg = time.perf_counter()
         (self._cache, self._tok, self._pos, self._rem, self._plen,
          self._pbuf, out, comp_slot, comp_step, comp_adm, n_comp,
@@ -1259,9 +1681,15 @@ class ServingEngine:
                 if self._alloc is not None:
                     self._alloc.rekey(ticket, s)
                     self._bt[s, :] = bt_row
+                    self._bt_dev = None
                 nr.admitted = now
                 self._slot_req[s] = nr
                 self._gen[s] = []
+                if self._prefix is not None:
+                    # staged seats bypass the cache (pages can't attach
+                    # mid-segment) but their prompt pages still register
+                    self._seat_digests[s] = self._prefix.chain(nr.prompt)
+                    self._reg_upto[s] = 0
                 self.stats["admitted"] += 1
                 self.stats["inseg_admissions"] += 1
             else:
@@ -1279,6 +1707,23 @@ class ServingEngine:
             if r is not None and rem_np[s] == 0:
                 self._retire_slot(s, r, now)
                 self._free.append(s)
+        # prefix registration: index every prompt page the segment fully
+        # wrote (pos frontier crossed its end). Host bookkeeping only —
+        # the pool bytes were produced by this segment's device ops, so
+        # any later lookup's gather is ordered after them.
+        if self._prefix is not None:
+            for s, r in enumerate(self._slot_req):
+                if r is None or not self._seat_digests[s]:
+                    continue
+                done = int(self._reg_upto[s])
+                n_ready = min(int(self._slot_pos[s]) // self.page_size,
+                              len(self._seat_digests[s]))
+                if n_ready > done:
+                    self._prefix.register(
+                        self._seat_digests[s][done:n_ready],
+                        [int(p) for p in self._bt[s, done:n_ready]])
+                    self._reg_upto[s] = n_ready
+            self.stats["evictions"] = self._alloc.evictions
         return n_steps
 
     def drain_completions(self) -> List[Request]:
@@ -1297,12 +1742,19 @@ class ServingEngine:
         bubble = self.stats["bubble_slot_steps"]
         segs = self.stats["decode_dispatches"]
         total = busy + bubble
+        if self._alloc is not None:
+            self.stats["evictions"] = self._alloc.evictions
         return {
             "slot_busy_frac": busy / total if total else 0.0,
             "admissions_per_segment":
                 self.stats["inseg_admissions"] / segs if segs else 0.0,
             "bubble_slot_steps": float(bubble),
             "segments": float(segs),
+            "prefix_hits": float(self.stats["prefix_hits"]),
+            "prefix_pages_reused":
+                float(self.stats["prefix_pages_reused"]),
+            "cow_copies": float(self.stats["cow_copies"]),
+            "evictions": float(self.stats["evictions"]),
         }
 
     def serve(self, reqs: Sequence[Request]) -> List[Request]:

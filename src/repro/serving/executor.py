@@ -87,6 +87,8 @@ class EngineExecutorConfig:
     stage_slots: int = 0              # in-segment admission ring (0 = off)
     admission: str = "worstcase"      # page admission: worstcase|optimistic
     preempt_policy: str = "slack"     # pressure victim choice: slack|lru
+    prefix_cache: bool = False        # page-granular prompt-prefix sharing
+    prefix_evict: str = "lru"         # cached-page eviction: lru|fifo
 
 
 class EngineExecutor:
@@ -162,6 +164,8 @@ class EngineExecutor:
                 stage_slots=self.cfg.stage_slots,
                 admission=self.cfg.admission,
                 preempt_policy=self.cfg.preempt_policy,
+                prefix_cache=self.cfg.prefix_cache,
+                prefix_evict=self.cfg.prefix_evict,
                 **kwargs)
             eng.warmup(prompt_lens=[self.cfg.prompt_len])
         # dict order doubles as the LRU list: reinsert on every access
@@ -194,7 +198,9 @@ class EngineExecutor:
         occ0 = {k: eng.stats[k] for k in
                 ("busy_slot_steps", "bubble_slot_steps",
                  "inseg_admissions", "decode_dispatches",
-                 "preemptions", "pressure_stalls")}
+                 "preemptions", "pressure_stalls",
+                 "prefix_hits", "prefix_pages_reused", "cow_copies",
+                 "evictions")}
         t0 = time.perf_counter()
         for er in requests:
             ers: List[Request] = []
@@ -233,6 +239,13 @@ class EngineExecutor:
             "bubble_slot_steps": d["bubble_slot_steps"],
             "preemptions": d["preemptions"],
             "pressure_stalls": d["pressure_stalls"],
+            # prefix-cache counters (all zero with the cache off): the
+            # hit rate here is what model selection / autoscaling can
+            # later key on to co-locate shared-prefix traffic
+            "prefix_hits": d["prefix_hits"],
+            "prefix_pages_reused": d["prefix_pages_reused"],
+            "cow_copies": d["cow_copies"],
+            "evictions": d["evictions"],
         })
         for er, ers in groups:
             if er.on_outputs is not None:

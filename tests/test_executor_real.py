@@ -288,7 +288,9 @@ def test_payload_runs_do_not_refit_profiles():
         busy = False
         stats = {"busy_slot_steps": 0, "bubble_slot_steps": 0,
                  "inseg_admissions": 0, "decode_dispatches": 0,
-                 "preemptions": 0, "pressure_stalls": 0}
+                 "preemptions": 0, "pressure_stalls": 0,
+                 "prefix_hits": 0, "prefix_pages_reused": 0,
+                 "cow_copies": 0, "evictions": 0}
 
         def warmup(self, prompt_lens=()):
             pass

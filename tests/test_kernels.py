@@ -190,3 +190,69 @@ def test_paged_decode_attention(case, dtype):
     want = jnp.concatenate(wants, axis=0)
     np.testing.assert_allclose(np.asarray(out, np.float32),
                                np.asarray(want, np.float32), **tol(dtype))
+
+
+FUSED_PAGED_CASES = [
+    # (B, K, G, n_logical, page_size, pages_per_slot, D)
+    (2, 2, 4, 12, 64, 4, 64),
+    (3, 4, 1, 8, 128, 2, 64),
+    (2, 1, 8, 16, 32, 8, 128),    # MQA, fine pages
+]
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("case", FUSED_PAGED_CASES)
+def test_fused_paged_decode_attention(case, dtype):
+    """Fused write+attend kernel == XLA pool scatter followed by the
+    masked paged attend, on a trash-page pool (one extra page at the
+    sentinel index) with a mix of live, first-token, and sentinel slots.
+    Checks the attention output, the written pool pages, and that no
+    other live page is disturbed."""
+    from repro.kernels.decode_attention import fused_paged_decode_attention
+    from repro.models import kvcache as KV
+    from repro.models.layers import paged_attention_core
+
+    B, K, G, n_logical, ps, P, D = case
+    n_phys = n_logical + 1            # + trash page == sentinel index
+    sent = n_logical
+    rng = jax.random.PRNGKey(hash(case) % 2**31)
+    k1, k2, k3, k4, k5, k6, k7 = jax.random.split(rng, 7)
+    q = jax.random.normal(k1, (B, K, G, D), jnp.float32).astype(dtype)
+    k_pool = jax.random.normal(k2, (n_phys, ps, K, D),
+                               jnp.float32).astype(dtype)
+    v_pool = jax.random.normal(k3, (n_phys, ps, K, D),
+                               jnp.float32).astype(dtype)
+    k_new = jax.random.normal(k4, (B, K, D), jnp.float32).astype(dtype)
+    v_new = jax.random.normal(k5, (B, K, D), jnp.float32).astype(dtype)
+    # slot B-1 is inactive (all-sentinel row, its write lands in the
+    # trash page); the rest hold exactly the pages their position needs
+    perm = jax.random.permutation(k6, n_logical)[: B * P].reshape(B, P)
+    pos = jax.random.randint(k7, (B,), 0, P * ps)
+    pos = pos.at[0].set(0)                         # first-token slot
+    n_alloc = pos // ps + 1
+    bt = jnp.where(jnp.arange(P)[None, :] < n_alloc[:, None], perm, sent)
+    bt = bt.at[B - 1].set(sent)
+
+    out, kp2, vp2 = fused_paged_decode_attention(
+        q, k_new, v_new, k_pool, v_pool, bt, pos, interpret=True)
+
+    # reference path: scatter (sentinel rows land in the trash page on
+    # this layout too), then the masked block-table attend
+    kp_ref, vp_ref = KV.paged_update_layer_cache(
+        k_pool, v_pool, k_new[:, None], v_new[:, None], bt, pos)
+    o_ref = paged_attention_core(q[:, None], kp_ref, vp_ref, bt,
+                                 kv_valid_len=pos + 1, impl="xla")[:, 0]
+
+    live = sorted({int(p) for p in np.asarray(bt).ravel() if p < sent})
+    idle = [p for p in range(n_logical) if p not in live]
+    np.testing.assert_array_equal(np.asarray(kp2)[live],
+                                  np.asarray(kp_ref)[live])
+    np.testing.assert_array_equal(np.asarray(vp2)[live],
+                                  np.asarray(vp_ref)[live])
+    np.testing.assert_array_equal(np.asarray(kp2)[idle],
+                                  np.asarray(k_pool)[idle])
+    np.testing.assert_array_equal(np.asarray(vp2)[idle],
+                                  np.asarray(v_pool)[idle])
+    np.testing.assert_allclose(np.asarray(out, np.float32)[:B - 1],
+                               np.asarray(o_ref, np.float32)[:B - 1],
+                               **tol(dtype))

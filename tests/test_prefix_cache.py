@@ -1,0 +1,464 @@
+"""Prefix caching with copy-on-write page sharing (ISSUE 7).
+
+Host-side unit tests pin the PrefixCache index (chained digests,
+longest-run lookup, registration races, eviction policies) and the
+allocator's refcount/COW mechanics; the engine tests pin the acceptance
+guarantee — greedy outputs with the prefix cache on are bit-identical to
+the cache-off paged engine and the contiguous engine, across chunked
+prefill, in-segment admission (staging ring), optimistic admission with
+preemption, and forced preempt + re-admission — plus the hybrid clamp
+(recurrent state cannot be recovered from shared pages) and the stats
+counters the selection layer keys on.
+"""
+import numpy as np
+import pytest
+
+from repro.serving.engine import PageAllocator, PrefixCache
+
+
+def _invariant(alloc):
+    """free + cached + unique live pages == whole pool; refcounts match
+    the holder lists exactly."""
+    live = alloc.live_pages()
+    uniq = set(live)
+    assert len(alloc._free) + alloc.n_cached + len(uniq) == alloc.n_pages
+    counts = {}
+    for p in live:
+        counts[p] = counts.get(p, 0) + 1
+    assert counts == dict(alloc._refcnt)
+    assert not (uniq & set(alloc._cached))
+    assert not (uniq & set(alloc._free))
+
+
+# ---------------------------------------------------------------------------
+# PrefixCache host-side unit tests
+
+
+def test_chain_digests_commit_to_whole_prefix():
+    alloc = PageAllocator(8, 4)
+    pc = PrefixCache(alloc, 4)
+    toks = np.arange(13, dtype=np.int32)        # 3 full pages + 1 spare
+    c = pc.chain(toks)
+    assert len(c) == 3                          # partial page never hashed
+    # shared prefix -> shared digests, then divergence poisons the chain
+    other = toks.copy()
+    other[5] = 999
+    c2 = pc.chain(other)
+    assert c2[0] == c[0]
+    assert c2[1] != c[1] and c2[2] != c[2]
+    # a differing *early* token changes every later digest (chaining)
+    head = toks.copy()
+    head[0] = 999
+    assert all(a != b for a, b in zip(pc.chain(head), c))
+
+
+def test_register_lookup_longest_indexed_run():
+    alloc = PageAllocator(8, 4)
+    pc = PrefixCache(alloc, 4)
+    toks = np.arange(12, dtype=np.int32)
+    digests = pc.chain(toks)
+    alloc.reserve("a", 12)
+    pages = alloc.cover("a", 12)
+    pc.register(digests, pages)
+    assert pc.lookup(toks) == pages
+    assert pc.lookup(toks[:8]) == pages[:2]     # prefix of the prompt
+    assert pc.lookup(toks[:7]) == pages[:1]     # partial page drops off
+    assert pc.lookup(np.arange(100, 112, dtype=np.int32)) == []
+    # unindex a middle page: the run stops there even though page 2
+    # stays indexed (lookup needs a contiguous indexed chain)
+    pc.unindex(pages[1])
+    assert pc.lookup(toks) == pages[:1]
+    _invariant(alloc)
+
+
+def test_register_race_keeps_first_page():
+    """Two slots racing the same prompt each keep their private copy;
+    the first registration wins and the loser's page stays unindexed."""
+    alloc = PageAllocator(8, 4)
+    pc = PrefixCache(alloc, 4)
+    toks = np.arange(4, dtype=np.int32)
+    (h,) = pc.chain(toks)
+    alloc.reserve("a", 4)
+    alloc.reserve("b", 4)
+    (pa,) = alloc.cover("a", 4)
+    (pb,) = alloc.cover("b", 4)
+    pc.register([h], [pa])
+    pc.register([h], [pb])                      # raced duplicate
+    assert pc.lookup(toks) == [pa]
+    assert pb not in pc._hash_of
+    # releasing the loser returns its page straight to the free list
+    alloc.release("b")
+    assert pb in alloc._free
+    _invariant(alloc)
+
+
+def test_release_retains_indexed_pages_until_pressure_evicts():
+    """Indexed pages survive their last holder (cached, rc==0) and are
+    reclaimed only when the free list runs dry; eviction unindexes."""
+    alloc = PageAllocator(3, 4)
+    pc = PrefixCache(alloc, 4)
+    toks = np.arange(8, dtype=np.int32)
+    alloc.reserve("a", 8)
+    pages = alloc.cover("a", 8)
+    pc.register(pc.chain(toks), pages)
+    alloc.release("a")
+    assert alloc.n_free == 1 and alloc.n_cached == 2
+    assert pc.lookup(toks) == pages             # still serveable
+    _invariant(alloc)
+    # demand 3 pages: 1 free + 2 evictions, cache fully drained
+    alloc.reserve("b", 12)
+    got = alloc.cover("b", 12)
+    assert len(got) == 3 and alloc.evictions == 2
+    assert len(pc) == 0 and pc.lookup(toks) == []
+    _invariant(alloc)
+
+
+@pytest.mark.parametrize("policy,victim", [("lru", 0), ("fifo", 0)])
+def test_eviction_policy_order(policy, victim):
+    """lru evicts the page whose release is oldest; fifo evicts in
+    registration order. With a single release batch the two agree; the
+    distinguishing case re-touches page 0 (re-attach + re-release) so
+    lru's recency order flips while fifo's registration order does not."""
+    alloc = PageAllocator(2, 4)
+    pc = PrefixCache(alloc, 4, policy=policy)
+    toks = np.arange(8, dtype=np.int32)
+    alloc.reserve("a", 8)
+    pages = alloc.cover("a", 8)
+    pc.register(pc.chain(toks), pages)
+    alloc.release("a")                          # cached: [p0, p1]
+    # re-touch p0: now p0 is most-recently released
+    alloc.reserve("t", 4)
+    alloc.attach("t", [pages[0]])
+    alloc.release("t")                          # lru order: [p1, p0]
+    alloc.reserve("b", 4)
+    (got,) = alloc.cover("b", 4)
+    expect = pages[1] if policy == "lru" else pages[victim]
+    assert got == expect
+    _invariant(alloc)
+
+
+def test_attach_refcounts_and_cow_gives_private_page():
+    alloc = PageAllocator(4, 4)
+    pc = PrefixCache(alloc, 4)
+    toks = np.arange(8, dtype=np.int32)
+    alloc.reserve("a", 8)
+    pages = alloc.cover("a", 8)
+    pc.register(pc.chain(toks), pages)
+    alloc.reserve("b", 8)
+    alloc.attach("b", pages)
+    assert alloc.refcount(pages[0]) == 2
+    _invariant(alloc)
+    # COW b's last page: b gets a fresh rc==1 page, a keeps the original
+    old, new = alloc.cow("b", 1)
+    assert old == pages[1] and new not in pages
+    assert alloc.refcount(old) == 1 and alloc.refcount(new) == 1
+    assert alloc.pages_of("a") == pages
+    assert alloc.pages_of("b") == [pages[0], new]
+    _invariant(alloc)
+    alloc.release("a")
+    alloc.release("b")
+    # a's indexed pages cached, b's private COW page freed
+    assert alloc.n_cached == 2 and alloc.n_free == 2
+    _invariant(alloc)
+
+
+def test_bad_policy_rejected():
+    alloc = PageAllocator(2, 4)
+    with pytest.raises(ValueError, match="policy"):
+        PrefixCache(alloc, 4, policy="mru")
+
+
+# ---------------------------------------------------------------------------
+# randomized interleavings of the sharing life cycle
+
+
+def run_share_ops(ops, n_pages, page_size, max_slots):
+    """Drive the refcounting allocator through the prefix-sharing life
+    cycle — register / attach (cache hit) / cow (shared-page write) /
+    release-retains-cached / evict-under-pressure — checking the sharing
+    invariants after every op:
+
+    * ``free + cached + unique_live == n_pages`` (conservation);
+    * every page's refcount equals the number of holders listing it;
+    * eviction only ever takes rc==0 pages (checked in the hook itself);
+    * ``cow`` hands back a private rc==1 page and the shared original
+      keeps its other holders.
+
+    Shared between the hypothesis property test in
+    ``test_property_paged_alloc.py`` and the seeded fuzz mirror below
+    (which runs without hypothesis).
+    """
+    alloc = PageAllocator(n_pages, page_size)
+    indexed = set()                      # model of the prefix index
+    alloc.retain = lambda p: p in indexed
+    evicted = []
+
+    def on_evict(p):
+        assert alloc.refcount(p) == 0, "evicted a referenced page"
+        indexed.discard(p)
+        evicted.append(p)
+
+    alloc.on_evict = on_evict
+    live = {}                            # holder -> npos
+    next_h = 0
+    for kind, pick, npos in ops:
+        npos = min(npos, n_pages * page_size)
+        if kind == "admit":
+            if len(live) >= max_slots or not alloc.can_reserve(npos):
+                continue
+            h = ("h", next_h)
+            next_h += 1
+            alloc.reserve(h, npos)
+            alloc.cover(h, min(npos, page_size))
+            live[h] = npos
+        elif kind == "grow" and live:
+            h = sorted(live)[pick % len(live)]
+            grown = alloc.cover(h, npos)
+            assert len(grown) == len(set(grown))
+        elif kind == "register" and live:
+            h = sorted(live)[pick % len(live)]
+            pages = alloc.pages_of(h)
+            if pages:
+                indexed.add(pages[pick % len(pages)])
+        elif kind == "attach" and live:
+            # a cache hit: an indexed page (live elsewhere or cached)
+            # gains a holder, within that holder's reservation
+            h = sorted(live)[pick % len(live)]
+            room = alloc.pages_needed(live[h]) - len(alloc.pages_of(h))
+            cand = sorted(indexed)
+            if cand and room > 0:
+                alloc.attach(h, [cand[pick % len(cand)]])
+        elif kind == "cow" and live:
+            h = sorted(live)[pick % len(live)]
+            pages = alloc.pages_of(h)
+            shared = [i for i, p in enumerate(pages)
+                      if alloc.refcount(p) > 1]
+            if shared and alloc.n_avail > 0:
+                idx = shared[pick % len(shared)]
+                old, new = alloc.cow(h, idx)
+                assert alloc.refcount(new) == 1
+                assert alloc.refcount(old) >= 1
+                assert alloc.pages_of(h)[idx] == new
+        elif kind == "finish" and live:
+            h = sorted(live)[pick % len(live)]
+            alloc.release(h)
+            del live[h]
+        # ---- sharing invariants --------------------------------------
+        held = alloc.live_pages()
+        uniq = set(held)
+        assert alloc.n_free + alloc.n_cached + len(uniq) == n_pages, \
+            "free + cached + unique live != pool"
+        counts = {}
+        for p in held:
+            counts[p] = counts.get(p, 0) + 1
+        assert counts == dict(alloc._refcnt), "refcount drift"
+        assert all(p in indexed for p in alloc._cached), \
+            "cached page not indexed"
+        assert not uniq & set(alloc._cached) and not uniq & set(alloc._free)
+    for h in sorted(live):
+        alloc.release(h)
+    # drain: every page is free or retained-for-reuse, none lost
+    assert alloc.n_free + alloc.n_cached == n_pages
+    assert alloc.committed == 0 and not alloc.live_pages()
+    return evicted
+
+
+_SHARE_KINDS = ["admit", "grow", "register", "attach", "cow", "finish"]
+
+
+def test_seeded_fuzz_sharing_invariants():
+    """Deterministic mirror of the hypothesis sharing property: 200
+    random interleavings from a pinned seed, runnable with or without
+    hypothesis installed."""
+    rng = np.random.default_rng(0x5EED)
+    total_evictions = 0
+    for _ in range(200):
+        n_pages = int(rng.integers(1, 33))
+        page_size = int(rng.integers(1, 13))
+        max_slots = int(rng.integers(1, 7))
+        n_ops = int(rng.integers(1, 81))
+        ops = [(_SHARE_KINDS[int(rng.integers(len(_SHARE_KINDS)))],
+                int(rng.integers(0, 2**31 - 1)), int(rng.integers(1, 97)))
+               for _ in range(n_ops)]
+        total_evictions += len(run_share_ops(ops, n_pages, page_size,
+                                             max_slots))
+    assert total_evictions > 0       # pressure path actually exercised
+
+
+# ---------------------------------------------------------------------------
+# engine acceptance: bit-identity + counters (real JAX models -> slow)
+
+slow = pytest.mark.slow
+
+
+@pytest.fixture(scope="module")
+def dense():
+    import jax
+    from repro.configs.registry import ARCHS
+    from repro.models import build_model
+    cfg = ARCHS["llama3.2-1b"].reduced()
+    model = build_model(cfg)
+    return cfg, model, model.init(jax.random.PRNGKey(0))
+
+
+def _shared_stream(cfg, n=10, seed=3):
+    """Mixed stream where most prompts open with one of two templates
+    (two+ full 8-wide pages of sharable prefix each)."""
+    rng = np.random.default_rng(seed)
+    t1 = rng.integers(0, cfg.vocab, size=24).astype(np.int32)
+    t2 = rng.integers(0, cfg.vocab, size=17).astype(np.int32)
+    from repro.serving.engine import Request
+    out = []
+    for i in range(n):
+        tpl = t1 if i % 2 == 0 else t2
+        sfx = rng.integers(0, cfg.vocab,
+                           size=int(rng.integers(2, 7))).astype(np.int32)
+        out.append(Request(rid=i, prompt=np.concatenate([tpl, sfx]),
+                           max_new_tokens=int(rng.integers(3, 9))))
+    return out
+
+
+def _run(model, params, reqs, **kw):
+    from repro.serving.engine import ServingEngine
+    eng = ServingEngine(model, params, max_batch=4, max_len=64,
+                        decode_block=8, **kw)
+    eng.serve(reqs)
+    return [tuple(map(int, r.tokens)) for r in reqs], eng
+
+
+@slow
+def test_prefix_cache_bit_identical_and_counts(dense):
+    cfg, model, params = dense
+    base, _ = _run(model, params, _shared_stream(cfg))
+    kw = dict(page_size=8, n_pages=24, chunk_threshold=12)
+    off, e_off = _run(model, params, _shared_stream(cfg), **kw)
+    on, e_on = _run(model, params, _shared_stream(cfg),
+                    prefix_cache=True, **kw)
+    assert base == off == on
+    assert e_off.stats["prefix_hits"] == 0
+    s = e_on.stats
+    assert s["prefix_hits"] > 0
+    assert s["prefix_tokens_skipped"] >= s["prefix_hits"] * 8
+    assert s["prefix_pages_reused"] * 8 >= s["prefix_tokens_skipped"]
+    # the selection layer sees the hit rate through occupancy
+    occ = e_on.occupancy
+    for key in ("prefix_hits", "prefix_pages_reused", "cow_copies",
+                "evictions"):
+        assert occ[key] == float(s[key])
+    # full drain: everything not cached for reuse is back on the free list
+    assert e_on._alloc.n_free + e_on._alloc.n_cached == e_on.n_pages
+
+
+@slow
+def test_prefix_cache_with_staging_ring(dense):
+    cfg, model, params = dense
+    base, _ = _run(model, params, _shared_stream(cfg))
+    got, eng = _run(model, params, _shared_stream(cfg), page_size=8,
+                    n_pages=24, chunk_threshold=12, stage_slots=2,
+                    prefix_cache=True)
+    assert base == got
+    # staged admissions bypass the lookup but their pages still register
+    assert eng.stats["inseg_admissions"] > 0
+    assert len(eng._prefix) > 0
+
+
+@slow
+def test_prefix_cache_under_optimistic_preemption(dense):
+    """Small pool: optimistic admission preempts and the cache evicts
+    under pressure — outputs still bit-identical, and eviction never
+    broke an invariant (drain check)."""
+    cfg, model, params = dense
+    base, _ = _run(model, params, _shared_stream(cfg))
+    got, eng = _run(model, params, _shared_stream(cfg), page_size=8,
+                    n_pages=12, chunk_threshold=12, admission="optimistic",
+                    prefix_cache=True)
+    assert base == got
+    assert eng.stats["preemptions"] > 0
+    assert eng._alloc.n_free + eng._alloc.n_cached == eng.n_pages
+
+
+@slow
+def test_forced_preempt_readmission_rehits(dense):
+    """A preempted victim's registered pages go cached on release; its
+    replay re-hits the index instead of recomputing the prefix."""
+    from repro.serving.engine import ServingEngine
+    cfg, model, params = dense
+    reqs = _shared_stream(cfg)
+    base = [tuple(map(int,
+                      _run(model, params, _shared_stream(cfg))[0][i]))
+            for i in range(len(reqs))]
+    eng = ServingEngine(model, params, max_batch=4, max_len=64,
+                        decode_block=8, page_size=8, n_pages=24,
+                        chunk_threshold=12, prefix_cache=True)
+    for r in reqs:
+        eng.submit(r)
+    eng.step()
+    h0 = eng.stats["prefix_hits"]
+    victim = next(r.rid for r in eng._slot_req if r is not None)
+    eng.preempt(victim)
+    while eng.busy:
+        eng.step()
+    assert [tuple(map(int, r.tokens)) for r in reqs] == base
+    assert eng.stats["prefix_hits"] > h0
+
+
+@slow
+def test_full_page_hit_triggers_cow(dense):
+    """Two live requests sharing an exact-multiple-of-page prompt: the
+    second's seat rewrites plen-1 inside the last shared page, which must
+    copy-on-write (the first request still reads the original)."""
+    import jax  # noqa: F401  (module fixture built already)
+    from repro.serving.engine import Request, ServingEngine
+    cfg, model, params = dense
+    rng = np.random.default_rng(11)
+    prompt = rng.integers(0, cfg.vocab, size=16).astype(np.int32)  # 2 pages
+    a = Request(rid=0, prompt=prompt.copy(), max_new_tokens=12)
+    b = Request(rid=1, prompt=prompt.copy(), max_new_tokens=4)
+    base_a = None
+    for r, new in ((a, 12), (b, 4)):
+        solo = ServingEngine(model, params, max_batch=2, max_len=64,
+                             decode_block=4)
+        rr = Request(rid=9, prompt=prompt.copy(), max_new_tokens=new)
+        solo.serve([rr])
+        if base_a is None:
+            base_a = tuple(map(int, rr.tokens))
+        else:
+            base_b = tuple(map(int, rr.tokens))
+    eng = ServingEngine(model, params, max_batch=2, max_len=64,
+                        decode_block=4, page_size=8, n_pages=16,
+                        chunk_threshold=12, prefix_cache=True)
+    eng.submit(a)
+    # a's prompt pages register once its position frontier passes them
+    # (16 teacher-forced positions at decode_block=4)
+    while len(eng._prefix) < 2:
+        eng.step()
+    assert eng.busy                 # a still mid-decode
+    eng.submit(b)                   # full-page hit while a is live
+    while eng.busy:
+        eng.step()
+    assert eng.stats["prefix_hits"] == 1
+    assert eng.stats["cow_copies"] == 1
+    assert tuple(map(int, a.tokens)) == base_a
+    assert tuple(map(int, b.tokens)) == base_b
+
+
+@slow
+def test_hybrid_family_clamps_prefix_cache_off():
+    """zamba2 carries O(1) recurrent leaves that shared KV pages cannot
+    reconstruct: the knob clamps off and outputs stay exact."""
+    import jax
+    from repro.configs.registry import ARCHS
+    from repro.models import build_model
+    from repro.serving.engine import ServingEngine
+    cfg = ARCHS["zamba2-1.2b"].reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    base, _ = _run(model, params, _shared_stream(cfg, n=6))
+    eng = ServingEngine(model, params, max_batch=4, max_len=64,
+                        decode_block=8, page_size=8, chunk_threshold=12,
+                        prefix_cache=True)
+    assert eng._prefix is None
+    reqs = _shared_stream(cfg, n=6)
+    eng.serve(reqs)
+    assert [tuple(map(int, r.tokens)) for r in reqs] == base
+    assert eng.stats["prefix_hits"] == 0

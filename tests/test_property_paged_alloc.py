@@ -254,3 +254,30 @@ def test_reservation_gates_admission(n_pages, page_size):
     assert not alloc.can_reserve(1)
     with pytest.raises(ValueError):
         alloc.reserve(n_pages + 1, 1)
+
+
+SHARE_OPS = st.lists(
+    st.tuples(st.sampled_from(["admit", "grow", "register", "attach",
+                               "cow", "finish"]),
+              st.integers(0, 2**31 - 1), st.integers(1, 96)),
+    min_size=1, max_size=100)
+
+
+# the op-driver (and its invariant checks) lives in test_prefix_cache so
+# the seeded fuzz mirror there runs even without hypothesis installed
+from test_prefix_cache import run_share_ops  # noqa: E402
+
+
+@settings(max_examples=150, deadline=None)
+@given(SHARE_OPS, st.integers(1, 48), st.integers(1, 16), st.integers(1, 8))
+def test_refcount_sharing_invariants(ops, n_pages, page_size, max_slots):
+    run_share_ops(ops, n_pages, page_size, max_slots)
+
+
+@settings(max_examples=100, deadline=None)
+@given(SHARE_OPS, st.integers(1, 8), st.integers(1, 4))
+def test_sharing_under_pressure_evicts_only_cached(ops, n_pages,
+                                                   page_size):
+    """Tiny pools force the evict path: the on_evict hook's rc==0 assert
+    (inside run_share_ops) is what this case exists to exercise."""
+    run_share_ops(ops, n_pages, page_size, max_slots=4)
