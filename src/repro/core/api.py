@@ -44,9 +44,11 @@ Also here: ``register_model(modelBinary/cfg, submitter, isPrivate)`` and
 from __future__ import annotations
 
 import dataclasses
+import threading
+import traceback
 import warnings
-from typing import (TYPE_CHECKING, Any, Callable, Dict, List, Optional,
-                    Sequence, Tuple, Union)
+from typing import (TYPE_CHECKING, Any, Callable, Dict, Iterator, List,
+                    Optional, Sequence, Tuple, Union)
 
 from repro.configs.base import ArchConfig
 from repro.core.worker import OfflineJob, Query
@@ -238,16 +240,38 @@ class QueryResult:
     attempts: int = 0
 
 
+@dataclasses.dataclass(frozen=True)
+class TokenChunk:
+    """One streamed batch of generated tokens for a handle's query.
+
+    ``input_idx`` names which payload prompt the tokens extend (chunks of
+    one prompt arrive in emission order; concatenating their ``tokens``
+    reproduces that prompt's final output exactly). ``t`` is the clock
+    time the chunk was harvested (wall seconds under ``RealClock``)."""
+    input_idx: int
+    tokens: Tuple[int, ...]
+    t: float
+
+
 class QueryHandle:
     """Future for one submitted ``QuerySpec`` (online query or offline job).
 
-    ``result(timeout=...)`` pumps the cluster's event loop until the query
-    completes (or the virtual deadline passes -> ``TimeoutError``), so a
-    client never needs to guess a ``run_until`` horizon or nest callbacks.
+    ``result(timeout=...)`` blocks until the query completes: under a
+    virtual clock it pumps the cluster's event loop (so a client never
+    needs to guess a ``run_until`` horizon), under ``RealClock`` it waits
+    on a condition variable that the control plane notifies at completion.
     ``add_done_callback(fn)`` registers ``fn(handle)``; callbacks run in
     registration order, immediately if already done. Completion is
     idempotent — a hedged duplicate finishing after its winner cannot
     re-fire the handle.
+
+    Streaming (real backend with ``stream`` enabled): ``on_tokens(cb)``
+    fires ``cb(TokenChunk)`` as decode segments retire (already-received
+    chunks are replayed at registration, so late registration never loses
+    tokens), ``iter_tokens()`` yields the same chunks as a generator, and
+    ``ttft`` reports time-to-first-token once the first chunk lands.
+    Callbacks must not block: they run on the delivering thread under the
+    handle's lock.
     """
 
     def __init__(self, spec: QuerySpec, loop,
@@ -260,19 +284,41 @@ class QueryHandle:
         self._done = False
         self._snapshot: Optional[QueryResult] = None
         self._callbacks: List[Callable[["QueryHandle"], None]] = []
+        # streaming state: chunks in emission order + registered sinks,
+        # all guarded by one condition variable (reentrant so delivery
+        # under the lock tolerates a cb registering another cb)
+        self._cv = threading.Condition(threading.RLock())
+        self._chunks: List[TokenChunk] = []
+        self._token_cbs: List[Callable[[TokenChunk], None]] = []
 
     # -- completion machinery (driven by the master) --------------------
     def _complete(self, *_ignored) -> None:
         if self._done:
             return
-        self._done = True
         # snapshot now: a losing hedge copy finishing later mutates the
         # raw Query's finish/violated fields, and result() must keep
         # reporting the winner's latency and verdict
         self._snapshot = self._build_result()
+        with self._cv:
+            self._done = True
+            self._cv.notify_all()
         for cb in self._callbacks:
             cb(self)
         self._callbacks.clear()
+
+    def _push_tokens(self, input_idx: int, tokens, t: float) -> None:
+        """Streaming sink the worker drives (via ``Query.on_tokens``):
+        record the chunk, wake blocked iterators, fan out to callbacks."""
+        chunk = TokenChunk(int(input_idx),
+                           tuple(int(x) for x in tokens), float(t))
+        with self._cv:
+            self._chunks.append(chunk)
+            self._cv.notify_all()
+            for cb in list(self._token_cbs):
+                try:
+                    cb(chunk)
+                except Exception:  # noqa: BLE001 - a broken subscriber
+                    traceback.print_exc()   # must not fail the query
 
     # -- future surface --------------------------------------------------
     @property
@@ -287,9 +333,16 @@ class QueryHandle:
             self._callbacks.append(fn)
 
     def result(self, timeout: Optional[float] = None) -> QueryResult:
-        """Block (by pumping the event loop) until done; ``timeout`` is in
-        loop time (virtual seconds on an ``EventLoop``)."""
+        """Block until done: pump the event loop under a virtual clock
+        (``timeout`` is then in virtual seconds), or wait on the handle's
+        condition variable under ``RealClock`` (wall seconds)."""
         loop = self._loop
+        if not getattr(loop, "virtual", True):
+            with self._cv:
+                if not self._cv.wait_for(lambda: self._done, timeout):
+                    raise TimeoutError(
+                        f"query not done after {timeout}s of wall time")
+            return self._snapshot
         deadline = None if timeout is None else loop.now() + timeout
         while not self._done:
             nxt = loop.next_event_time()
@@ -304,6 +357,64 @@ class QueryHandle:
                 f"query not done after pumping the loop to "
                 f"t={loop.now():.3f}s (timeout={timeout})")
         return self._snapshot
+
+    # -- streaming surface -----------------------------------------------
+    def on_tokens(self, cb: Callable[[TokenChunk], None]) -> None:
+        """Register a streaming sink; chunks already received are replayed
+        first (in order), then every future chunk fires ``cb`` as it
+        lands. Requires the query to have been submitted with streaming
+        enabled (real backend, ``stream`` on) to ever fire."""
+        with self._cv:
+            for chunk in self._chunks:
+                cb(chunk)
+            self._token_cbs.append(cb)
+
+    def iter_tokens(self,
+                    timeout: Optional[float] = None) -> Iterator[TokenChunk]:
+        """Yield ``TokenChunk``s in emission order until the query
+        completes. Under a virtual clock this pumps the event loop between
+        chunks; under ``RealClock`` it blocks on the condition variable.
+        ``timeout`` bounds the *total* iteration time."""
+        loop = self._loop
+        deadline = None if timeout is None else loop.now() + timeout
+        i = 0
+        while True:
+            with self._cv:
+                pending = self._chunks[i:]
+                i = len(self._chunks)
+                done = self._done
+            for chunk in pending:
+                yield chunk
+            if done:
+                return
+            if deadline is not None and loop.now() >= deadline:
+                raise TimeoutError(
+                    f"query still streaming after timeout={timeout}s")
+            if getattr(loop, "virtual", True):
+                if not loop.step():
+                    return             # loop drained; nothing can finish
+            else:
+                with self._cv:
+                    self._cv.wait_for(
+                        lambda: self._done or len(self._chunks) > i,
+                        timeout=None if deadline is None
+                        else max(deadline - loop.now(), 0.0))
+
+    @property
+    def chunks(self) -> List[TokenChunk]:
+        """Chunks received so far (emission order), without blocking."""
+        with self._cv:
+            return list(self._chunks)
+
+    @property
+    def ttft(self) -> Optional[float]:
+        """Time-to-first-token in clock seconds (first streamed chunk's
+        harvest time minus arrival); None until the first chunk lands or
+        when the query never streamed."""
+        q = self.query
+        if q is None or q.first_token < 0.0:
+            return None
+        return q.first_token - q.arrival
 
     # -- completed-state views -------------------------------------------
     def _build_result(self) -> QueryResult:

@@ -26,7 +26,7 @@ from repro.core.repository import ModelRepository
 from repro.core.selection import Selection, VariantSelector
 from repro.core.worker import OfflineJob, Query, Worker, WorkerConfig
 from repro.sim import hardware as HW
-from repro.sim.clock import EventLoop
+from repro.sim.clock import Clock
 
 
 @dataclasses.dataclass
@@ -54,7 +54,7 @@ class MasterConfig:
 
 class Master:
     def __init__(self, store: MetadataStore, repo: ModelRepository,
-                 loop: EventLoop, cfg: MasterConfig = MasterConfig(),
+                 loop: Clock, cfg: MasterConfig = MasterConfig(),
                  autoscale: bool = True,
                  executor_factory: Optional[Callable[[], object]] = None):
         self.store = store
@@ -211,6 +211,10 @@ class Master:
         q = self._query_from_spec(spec, arrival=self.loop.now())
         handle = QueryHandle(spec, self.loop, query=q)
         q.done_cb = handle._complete
+        # streaming executors forward per-segment tokens through the query
+        # straight into the handle (hedged duplicates are created without
+        # a sink, so only the primary copy ever streams)
+        q.on_tokens = handle._push_tokens
         sel = self._select(spec, batch=spec.n_inputs, record=True)
         self._dispatch(q, sel, retries=0)
         return handle

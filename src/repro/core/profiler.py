@@ -19,6 +19,7 @@ subject to the target's memory capacity.
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
 from typing import Callable, Dict, List, Sequence, Tuple
 
@@ -28,6 +29,9 @@ from repro.configs.base import ArchConfig
 from repro.core.abstraction import (ModelArchInfo, Registry, Variant,
                                     VariantProfile)
 from repro.sim import hardware as HW
+
+# serializes in-place VariantProfile mutation (see refit_profile)
+_refit_lock = threading.Lock()
 
 PROFILE_BATCHES = (1, 4, 8)
 OPT_BATCHES = (1, 4, 8, 16, 32, 64)
@@ -189,15 +193,23 @@ def refit_profile(profile: VariantProfile,
 
     This closes the loop the ROADMAP flagged: real execution feeding the
     control plane's latency model instead of one-off manual calibration.
+
+    Thread-safe: variants (and their profiles) are shared across every
+    executor in a cluster, and under the wall-clock runtime refits arrive
+    from concurrent stepper threads — the in-place (m, c, peak_qps,
+    source) update is serialized under a module lock so a reader never
+    sees a torn fit.
     """
     pts = {b: float(np.mean(ts)) for b, ts in observations.items() if ts}
     if len(pts) < min_points:
         return False
     batches = sorted(pts)
     m, c = fit_linear(batches, [pts[b] for b in batches])
-    profile.m, profile.c = m, c
-    profile.peak_qps = profile.max_batch / profile.latency(profile.max_batch)
-    profile.source = "measured"
+    with _refit_lock:
+        profile.m, profile.c = m, c
+        profile.peak_qps = \
+            profile.max_batch / profile.latency(profile.max_batch)
+        profile.source = "measured"
     return True
 
 

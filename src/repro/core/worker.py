@@ -23,6 +23,8 @@ the control plane stays importable without JAX.)
 from __future__ import annotations
 
 import dataclasses
+import functools
+import threading
 from collections import deque
 from typing import (Any, Callable, Deque, Dict, List, Optional, Protocol,
                     Tuple, runtime_checkable)
@@ -30,7 +32,20 @@ from typing import (Any, Callable, Deque, Dict, List, Optional, Protocol,
 from repro.core.metadata import InstanceState, MetadataStore
 from repro.core.repository import ModelRepository
 from repro.sim import hardware as HW
-from repro.sim.clock import EventLoop
+from repro.sim.clock import Clock
+
+
+def _locked(fn):
+    """Serialize a Worker method under the instance lock. Under the
+    EventLoop every entry point already runs on the single pumping thread;
+    under the wall-clock runtime, clock callbacks (scheduler thread) and
+    executor completions (stepper threads) interleave, so every method that
+    mutates pending/in-flight maps takes the reentrant lock."""
+    @functools.wraps(fn)
+    def wrapper(self, *args, **kwargs):
+        with self._lock:
+            return fn(self, *args, **kwargs)
+    return wrapper
 
 
 @dataclasses.dataclass
@@ -74,6 +89,12 @@ class Query:
     degraded: bool = False
     preemptions: int = 0            # engine preempt count behind `degraded`
     done_cb: Optional[Callable[["Query"], None]] = None
+    # streaming sink: called (input_idx, new_tokens, t_wall) as decode
+    # segments retire on a streaming executor; None = no streaming
+    on_tokens: Optional[Callable[[int, List[int], float], None]] = None
+    # wall time of the query's first streamed tokens (-1 until then);
+    # first_token - arrival is the query's TTFT
+    first_token: float = -1.0
 
     @property
     def latency(self) -> float:
@@ -120,6 +141,9 @@ class ExecRequest:
     on_outputs: Optional[Callable[[List[Any]], None]] = None
     slo: Optional[float] = None
     on_report: Optional[Callable[[Dict[str, Any]], None]] = None
+    # streaming sink: (input_idx, new_tokens, t_wall) per harvested
+    # segment, in emission order; only streaming executors call it
+    on_tokens: Optional[Callable[[int, List[int], float], None]] = None
 
 
 @runtime_checkable
@@ -139,6 +163,13 @@ class Executor(Protocol):
     def run(self, variant, batch: int,
             requests: Optional[List[ExecRequest]] = None) -> float:
         ...
+
+    # Executors may additionally expose
+    #   run_async(variant, batch, requests, on_done)
+    # returning immediately; ``on_done(duration, error)`` fires later from
+    # the executor's own thread. When present, the worker routes jobs
+    # through it instead of blocking the clock thread in ``run`` — see
+    # ``repro.serving.runtime.ThreadedEngineExecutor``.
 
 
 class SimExecutor:
@@ -222,7 +253,7 @@ class _LocalInstance:
 
 class Worker:
     def __init__(self, name: str, hardware, store: MetadataStore,
-                 repo: ModelRepository, loop: EventLoop,
+                 repo: ModelRepository, loop: Clock,
                  cfg: WorkerConfig = WorkerConfig(),
                  metrics: Optional[List[Query]] = None,
                  service_time_fn: Optional[Callable] = None,
@@ -234,6 +265,9 @@ class Worker:
         self.repo = repo
         self.loop = loop
         self.cfg = cfg
+        # guards pending/in-flight maps against stepper-thread completions
+        # under the wall-clock runtime (reentrant: _complete -> dispatch)
+        self._lock = threading.RLock()
         self.metrics = metrics if metrics is not None else []
         self.alive = True
         # fault injection: a hung worker is alive but frozen — heartbeats
@@ -260,6 +294,7 @@ class Worker:
 
     # ------------------------------------------------------------------
     # variant lifecycle
+    @_locked
     def load_variant(self, variant, on_ready: Optional[Callable] = None,
                      replicas: int = 1) -> bool:
         """Start loading a variant; becomes running after its load latency."""
@@ -279,15 +314,16 @@ class Worker:
         self.store.set_instance(inst)
 
         def ready():
-            if not self.alive or variant.name not in self.instances:
-                return
-            li.running = True
-            st = self.store.instance(variant.name, self.name)
-            if st is not None:
-                st.loading = False
-                st.running = True
-            self._try_dispatch(variant.name)
-            self._pump_offline()
+            with self._lock:
+                if not self.alive or variant.name not in self.instances:
+                    return
+                li.running = True
+                st = self.store.instance(variant.name, self.name)
+                if st is not None:
+                    st.loading = False
+                    st.running = True
+                self._try_dispatch(variant.name)
+                self._pump_offline()
             if on_ready:
                 on_ready()
 
@@ -295,6 +331,7 @@ class Worker:
                            ready)
         return True
 
+    @_locked
     def unload_variant(self, vname: str) -> None:
         li = self.instances.pop(vname, None)
         if li is None:
@@ -307,6 +344,7 @@ class Worker:
             if q.done_cb:
                 q.done_cb(q)
 
+    @_locked
     def set_replicas(self, vname: str, replicas: int) -> None:
         li = self.instances.get(vname)
         if li is None:
@@ -319,6 +357,7 @@ class Worker:
 
     # ------------------------------------------------------------------
     # query path
+    @_locked
     def enqueue(self, q: Query, vname: str) -> None:
         if not self.alive:
             q.failed = True
@@ -344,8 +383,7 @@ class Worker:
         return self.executor.run(job.instance.variant, job.batch,
                                  job.requests or None) * self.slowdown
 
-    @staticmethod
-    def _exec_request(q: Query) -> ExecRequest:
+    def _exec_request(self, q: Query) -> ExecRequest:
         """The executor-facing slice of one query: real prompts when the
         query carries a payload (outputs land back on ``q.outputs``),
         synthetic accounting otherwise — tokens decoded from synthetic
@@ -357,15 +395,29 @@ class Worker:
             qq.preemptions += int(rep.get("preemptions", 0))
             qq.degraded = qq.degraded or bool(rep.get("degraded"))
 
+        def tokens(idx, toks, _t, qq=q):
+            # re-stamp on the control plane's clock (the engine timestamps
+            # on its own perf_counter base): first_token - arrival is then
+            # the query's TTFT on the same timebase as every other metric.
+            # A hedged/cancelled copy stops forwarding, but the TTFT
+            # measurement stands.
+            t = self.loop.now()
+            if qq.first_token < 0.0:
+                qq.first_token = t
+            if qq.on_tokens is not None and not qq.cancelled:
+                qq.on_tokens(idx, toks, t)
+
         if q.payload is not None:
             return ExecRequest(
                 n_inputs=q.n_inputs, prompts=q.payload.prompts,
                 max_new_tokens=q.payload.max_new_tokens,
                 on_outputs=lambda outs, qq=q: setattr(qq, "outputs", outs),
-                slo=q.slo, on_report=report)
+                slo=q.slo, on_report=report,
+                on_tokens=tokens if q.on_tokens is not None else None)
         return ExecRequest(n_inputs=q.n_inputs, slo=q.slo,
                            on_report=report)
 
+    @_locked
     def _try_dispatch(self, vname: str) -> None:
         li = self.instances.get(vname)
         if li is None or not li.running or self._hung:
@@ -400,6 +452,10 @@ class Worker:
             dev.waiting.append(job)
 
     def _start(self, dev: _Device, job: _Job) -> None:
+        run_async = getattr(self.executor, "run_async", None)
+        if run_async is not None:
+            self._start_async(dev, job, run_async)
+            return
         # service time is resolved when the job actually starts on a slot:
         # a real executor runs the batch here (and measures it), a sim
         # executor just evaluates the profile — either way the completion
@@ -421,6 +477,43 @@ class Worker:
                 q.start = now
         self.loop.schedule(job.duration, lambda: self._complete(dev, job))
 
+    def _start_async(self, dev: _Device, job: _Job,
+                     run_async: Callable) -> None:
+        """Wall-clock path: hand the job to a threaded executor and return
+        immediately — the clock thread never blocks on real decode. The
+        executor's stepper thread calls ``on_done`` when the batch retires;
+        completion is marshaled back through ``loop.schedule(0, ...)`` so
+        ``_complete`` runs on the scheduler thread like every other
+        control-plane callback (the worker lock covers the overlap)."""
+        dev.active += 1
+        now = self.loop.now()
+        job.start_time = now
+        dev.running.add(job)
+        for q in job.queries:
+            if q.start < 0:
+                q.start = now
+
+        def on_done(duration: float, error=None):
+            def finish():
+                if error is not None:
+                    with self._lock:
+                        dev.active -= 1
+                        dev.running.discard(job)
+                        self._fail_job(dev, job)
+                    return
+                job.duration = duration
+                self._complete(dev, job)
+            self.loop.schedule(0.0, finish)
+
+        try:
+            run_async(job.instance.variant, job.batch,
+                      job.requests or None, on_done)
+        except Exception:
+            dev.active -= 1
+            dev.running.discard(job)
+            self._fail_job(dev, job)
+
+    @_locked
     def _fail_job(self, dev: _Device, job: _Job) -> None:
         """Executor rejected the batch before it started: surface failure
         (the master's retry path owns what happens next) and keep the
@@ -443,6 +536,7 @@ class Worker:
         if dev.waiting and dev.active < dev.slots:
             self._start(dev, dev.waiting.popleft())
 
+    @_locked
     def _complete(self, dev: _Device, job: _Job) -> None:
         if job.abandoned or self._hung:
             # abandoned: fail() already failed this job's queries through
@@ -494,6 +588,7 @@ class Worker:
 
     # ------------------------------------------------------------------
     # offline best-effort (paper §8.3, Fig. 10)
+    @_locked
     def submit_offline(self, job: OfflineJob) -> None:
         self.offline_jobs.append(job)
         self._pump_offline()
@@ -508,6 +603,7 @@ class Worker:
                 return True
         return False
 
+    @_locked
     def _pump_offline(self) -> None:
         if not self.alive or self._hung or self._offline_throttled():
             return
@@ -541,6 +637,7 @@ class Worker:
 
     # ------------------------------------------------------------------
     # monitoring daemon (2 s updates, paper §4/§7)
+    @_locked
     def monitor_tick(self) -> None:
         if not self.alive or self._hung:
             return
@@ -584,6 +681,7 @@ class Worker:
         routes every stranded query into the retry path)."""
         self._hung = True
 
+    @_locked
     def fail(self) -> None:
         """Kill the worker: everything it holds — pending queries, jobs
         waiting on a device, and jobs in flight — fails through ``done_cb``

@@ -18,6 +18,12 @@ registers the selected architectures, and drives a Poisson workload.
 ``--real-engine`` instead drives one real continuous-batching engine
 directly (no control plane) with a mixed-length stream and reports
 measured tokens/sec and compile counts — the standalone data-plane check.
+
+``--clock wall`` (requires ``--backend real``) runs the control plane
+against ``RealClock`` as a long-running server: a seeded Poisson client
+submits payload-carrying queries live, stepper threads drive the engines,
+and tokens stream back per decode segment (TTFT is reported alongside
+completion latency). SIGINT drains in-flight work and exits cleanly.
 """
 from __future__ import annotations
 
@@ -25,7 +31,7 @@ import argparse
 from typing import Optional, Sequence
 
 from repro.configs.registry import ARCHS
-from repro.core.api import QuerySpec
+from repro.core.api import QueryPayload, QuerySpec
 from repro.sim.cluster import make_cluster
 from repro.sim.workload import poisson_arrivals
 from benchmarks.common import steady_metrics  # noqa: E402
@@ -101,6 +107,105 @@ def _real_engine_demo(arch: str, n_reqs: int, slots: int,
               f"{s['evictions']} evictions")
 
 
+def _serve_wall(c, arch_names, args) -> None:
+    """Long-running wall-clock server: a seeded Poisson client submits
+    payload-carrying queries on the RealClock scheduler thread, tokens
+    stream back per decode segment, and SIGINT (or the duration horizon)
+    drains in-flight work before a clean exit."""
+    import signal
+    import threading
+    import time
+
+    import numpy as np
+
+    from benchmarks.common import pct
+
+    rng = np.random.default_rng(0)
+    # payload shape fits the default reduced engine (max_len 32): several
+    # decode segments per request so TTFT genuinely precedes completion
+    prompt_lens = (4, 13)
+    max_new = 8
+    vocabs = {a: ARCHS[a].reduced().vocab for a in arch_names}
+    handles: list = []
+    streamed = {"chunks": 0, "tokens": 0}
+    stop = threading.Event()
+    loop = c.loop
+
+    def on_sigint(signum, frame):
+        print("\nSIGINT: draining in-flight work...", flush=True)
+        stop.set()
+
+    prev = signal.signal(signal.SIGINT, on_sigint)
+
+    def count(chunk):
+        streamed["chunks"] += 1
+        streamed["tokens"] += len(chunk.tokens)
+
+    def fire():
+        # runs on the scheduler thread — the master's dispatch is just
+        # another clock callback, so no cross-thread marshaling needed
+        if stop.is_set():
+            return
+        a = arch_names[int(rng.integers(len(arch_names)))]
+        prompt = rng.integers(
+            0, vocabs[a],
+            size=int(rng.integers(*prompt_lens))).astype(np.int32)
+        h = c.api.submit(QuerySpec.arch(
+            a, latency_ms=args.slo_ms,
+            payload=QueryPayload.of([prompt], max_new_tokens=max_new)))
+        h.on_tokens(count)
+        handles.append(h)
+
+    # seeded Poisson arrivals over [0, duration), scheduled up front on
+    # the wall clock (the scheduler thread fires them as time passes)
+    t0 = loop.now()
+    t = float(rng.exponential(1.0 / max(args.rate, 1e-9)))
+    n_arrivals = 0
+    while t < args.duration:
+        loop.schedule_at(t0 + t, fire)
+        n_arrivals += 1
+        t += float(rng.exponential(1.0 / max(args.rate, 1e-9)))
+
+    while not stop.is_set():
+        if loop.now() - t0 >= args.duration and \
+                all(h.done for h in list(handles)):
+            break
+        time.sleep(0.05)
+
+    # drain: queries already in the system stream out; SIGINT only stops
+    # new arrivals (fire checks the flag)
+    deadline = time.monotonic() + 30.0
+    while not all(h.done for h in list(handles)):
+        if time.monotonic() >= deadline:
+            print("drain timeout: abandoning remaining work", flush=True)
+            break
+        time.sleep(0.05)
+    for ex in getattr(c, "executors", []):
+        ex.shutdown()
+    loop.shutdown()
+    signal.signal(signal.SIGINT, prev)
+
+    done = [h for h in handles if h.done]
+    results = [h.result(timeout=0.001) for h in done]
+    ok = [r for r in results if r.ok]
+    ttfts = [h.ttft for h in done if h.ttft is not None]
+    lats = [r.latency for r in ok]
+    wall = loop.now() - t0
+    print(f"wall-clock serve [{'/'.join(arch_names)}]: "
+          f"{n_arrivals} arrivals, {len(handles)} submitted, "
+          f"{len(ok)} completed ok, "
+          f"{sum(1 for r in results if r.failed)} failed "
+          f"in {wall:.1f}s wall ({len(ok)/max(wall, 1e-9):.2f} q/s)")
+    print(f"streamed: {streamed['tokens']} tokens in "
+          f"{streamed['chunks']} chunks across {len(done)} queries")
+    if ttfts and lats:
+        print(f"TTFT p50={pct(ttfts, 50)*1e3:.0f}ms "
+              f"p99={pct(ttfts, 99)*1e3:.0f}ms | completion "
+              f"p50={pct(lats, 50)*1e3:.0f}ms "
+              f"p99={pct(lats, 99)*1e3:.0f}ms")
+    print("clean shutdown: drained in-flight work", flush=True)
+
+
 def main(argv: Optional[Sequence[str]] = None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama3.2-1b",
@@ -108,6 +213,12 @@ def main(argv: Optional[Sequence[str]] = None) -> None:
     ap.add_argument("--backend", choices=["sim", "real"], default="sim",
                     help="worker data plane: profiled t(b) models (sim) or "
                          "real reduced-config engines (real)")
+    ap.add_argument("--clock", choices=["virtual", "wall"],
+                    default="virtual",
+                    help="virtual: discrete-event simulation of time; "
+                         "wall: long-running server on RealClock with "
+                         "threaded engine stepping and token streaming "
+                         "(needs --backend real)")
     ap.add_argument("--workers", type=int, default=2)
     ap.add_argument("--cpu-workers", type=int, default=1)
     ap.add_argument("--rate", type=float, default=50.0, help="queries/s")
@@ -164,6 +275,14 @@ def main(argv: Optional[Sequence[str]] = None) -> None:
         raise SystemExit("--prefix-cache shares prompt prefixes at page "
                          "granularity; it needs --page-size (contiguous "
                          "slot rows have no pages to share)")
+    if args.clock == "wall" and (args.backend != "real"
+                                 or args.real_engine):
+        raise SystemExit("--clock wall runs the control plane in real "
+                         "time against live engines; it needs --backend "
+                         "real (the sim executor resolves service times "
+                         "instantly and has nothing to do on a wall "
+                         "clock, and --real-engine bypasses the control "
+                         "plane entirely)")
     if args.real_engine:
         _real_engine_demo(args.arch, args.real_reqs, args.real_slots,
                           page_size=args.page_size, n_pages=args.n_pages,
@@ -211,9 +330,14 @@ def main(argv: Optional[Sequence[str]] = None) -> None:
             prefix_evict=args.prefix_evict)
     c = make_cluster(n_accel=args.workers, n_cpu=args.cpu_workers,
                      archs=archs, autoscale=not args.no_autoscale, cfg=cfg,
-                     backend=args.backend, engine_cfg=engine_cfg)
+                     backend=args.backend, engine_cfg=engine_cfg,
+                     clock=args.clock)
     arch_names = [a for a in (
         [args.arch] if args.arch != "all" else list(ARCHS))]
+
+    if args.clock == "wall":
+        _serve_wall(c, arch_names, args)
+        return
 
     import numpy as np
     rng = np.random.default_rng(0)

@@ -213,6 +213,13 @@ class Request:
     # times this request was preempted (pages freed, parked, prefix
     # replayed); > 0 lets callers surface a "degraded" flag on results
     preemptions: int = 0
+    # streaming cursor: tokens [0, streamed) were already handed out via
+    # ``drain_partial_outputs`` — survives preempt/replay, so a re-admitted
+    # request never re-streams tokens it delivered before parking
+    streamed: int = 0
+    # wall time the first generated token was harvested (segment
+    # granularity); -1 until it happens. first_token - arrival is TTFT.
+    first_token: float = -1.0
 
 
 @dataclasses.dataclass
@@ -537,9 +544,16 @@ class ServingEngine:
                  chunk_threshold: Optional[int] = None,
                  stage_slots: int = 0, admission: str = "worstcase",
                  preempt_policy: str = "slack",
-                 prefix_cache: bool = False, prefix_evict: str = "lru"):
+                 prefix_cache: bool = False, prefix_evict: str = "lru",
+                 stream: bool = False):
         self.model = model
         self.params = params
+        # token streaming: when on, every harvest appends newly generated
+        # tokens to a partial-output buffer (drain_partial_outputs) and
+        # stamps each request's first-token wall time. Off by default so
+        # non-streaming callers never accumulate an undrained buffer.
+        self.stream = bool(stream)
+        self._partial: List[Tuple[Request, List[int], float]] = []
         self.max_batch = max_batch
         self.max_len = max_len
         self.decode_block = decode_block
@@ -1555,10 +1569,29 @@ class ServingEngine:
             raise ValueError(f"slot {slot} is not live")
         self._preempt_slot(slot)
 
+    def _flush_stream(self, slot: int, r: Request, now: float) -> None:
+        """Move tokens past the request's streaming cursor into the
+        partial-output buffer (no-op unless ``stream=True``). The cursor
+        lives on the Request, so a preempted occupant whose generated
+        tokens are re-credited at replay never re-streams them."""
+        if not self.stream:
+            return
+        done = self._gen.get(slot)
+        if done is None:
+            return
+        n = min(len(done), r.max_new_tokens)
+        if n > r.streamed:
+            if r.first_token < 0.0:
+                r.first_token = now
+            self._partial.append((r, [int(x) for x in done[r.streamed:n]],
+                                  now))
+            r.streamed = n
+
     def _retire_slot(self, slot: int, r: Request, now: float) -> None:
         """Finish ``slot``'s current occupant: hand it its tokens, free its
         pages. The caller decides what happens to the slot next (freed, or
         re-occupied by a staged request the segment pulled in)."""
+        self._flush_stream(slot, r, now)
         r.tokens = np.asarray(
             self._gen.pop(slot)[: r.max_new_tokens], np.int32)
         r.latency = now - r.arrival
@@ -1699,6 +1732,7 @@ class ServingEngine:
                 continue
             row = out_np[s, consumed[s]:]
             self._gen[s].extend(int(x) for x in row[row >= 0])
+            self._flush_stream(s, r, now)
         # a prefilled request with max_new == 1 is complete at admission
         # (its only token came from prefill, rem == 0): it never passes
         # through the loop's refill logic, so sweep it here
@@ -1729,6 +1763,14 @@ class ServingEngine:
     def drain_completions(self) -> List[Request]:
         """Return (and clear) the requests completed since the last drain."""
         out, self._completed = self._completed, []
+        return out
+
+    def drain_partial_outputs(self) -> List[Tuple[Request, List[int], float]]:
+        """Return (and clear) ``(request, new_tokens, t_wall)`` chunks
+        harvested since the last drain (``stream=True`` engines only).
+        Chunks for one request appear in emission order, and across all
+        drains their concatenation equals ``request.tokens`` exactly."""
+        out, self._partial = self._partial, []
         return out
 
     @property

@@ -55,6 +55,7 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
+import threading
 import time
 from collections import deque
 from typing import Any, Deque, Dict, List, Optional, Tuple
@@ -89,6 +90,8 @@ class EngineExecutorConfig:
     preempt_policy: str = "slack"     # pressure victim choice: slack|lru
     prefix_cache: bool = False        # page-granular prompt-prefix sharing
     prefix_evict: str = "lru"         # cached-page eviction: lru|fifo
+    stream: bool = False              # per-segment partial outputs through
+    #                                   ExecRequest.on_tokens (TTFT)
 
 
 class EngineExecutor:
@@ -119,6 +122,9 @@ class EngineExecutor:
             deque(maxlen=max(cfg.obs_window * 8, 256))
         self._models = model_cache if model_cache is not None else {}
         self._rid = itertools.count()
+        # serializes run() (engines, observations, occupancy_log): the
+        # wall-clock runtime's stepper thread and direct callers may race
+        self._lock = threading.RLock()
 
     # ------------------------------------------------------------------
     def _model(self, arch: str):
@@ -166,6 +172,7 @@ class EngineExecutor:
                 preempt_policy=self.cfg.preempt_policy,
                 prefix_cache=self.cfg.prefix_cache,
                 prefix_evict=self.cfg.prefix_evict,
+                stream=self.cfg.stream,
                 **kwargs)
             eng.warmup(prompt_lens=[self.cfg.prompt_len])
         # dict order doubles as the LRU list: reinsert on every access
@@ -177,54 +184,52 @@ class EngineExecutor:
         return (np.arange(self.cfg.prompt_len, dtype=np.int64)
                 % vocab).astype(np.int32)
 
-    def run(self, variant: Variant, batch: int,
-            requests: Optional[List[ExecRequest]] = None) -> float:
-        """Serve one batch for real — each ExecRequest's payload prompts
-        (or synthetic stand-ins) become engine Requests; return the
-        measured service time, hand generated tokens back through each
-        request's ``on_outputs`` sink, and fold the measurement into the
-        variant's profile."""
-        eng = self._engine(variant)
-        vocab = self.arch_cfgs[variant.arch].vocab
-        if not requests:
-            requests = [ExecRequest(n_inputs=max(int(batch), 1))]
-        # compile any new prompt buckets outside the measured window, so
-        # a first-seen payload length doesn't bill XLA compile time as
-        # service time
-        real_lens = [len(p) for er in requests for p in er.prompts]
-        if real_lens:
-            eng.warmup(prompt_lens=real_lens)
-        groups: List[Tuple[ExecRequest, List[Request]]] = []
-        occ0 = {k: eng.stats[k] for k in
-                ("busy_slot_steps", "bubble_slot_steps",
+    _OCC_KEYS = ("busy_slot_steps", "bubble_slot_steps",
                  "inseg_admissions", "decode_dispatches",
                  "preemptions", "pressure_stalls",
                  "prefix_hits", "prefix_pages_reused", "cow_copies",
-                 "evictions")}
-        t0 = time.perf_counter()
-        for er in requests:
-            ers: List[Request] = []
-            if er.prompts:
-                for p in er.prompts:
-                    ers.append(Request(
-                        rid=next(self._rid),
-                        prompt=np.asarray(p, np.int32),
-                        max_new_tokens=max(er.max_new_tokens, 1),
-                        arrival=t0, slo=er.slo))
-            else:
-                for _ in range(max(er.n_inputs, 1)):
-                    ers.append(Request(
-                        rid=next(self._rid),
-                        prompt=self._synthetic_prompt(vocab),
-                        max_new_tokens=self.cfg.max_new, arrival=t0,
-                        slo=er.slo))
-            for r in ers:
-                eng.submit(r)
-            groups.append((er, ers))
-        while eng.busy:
-            eng.step()
-        eng.drain_completions()
-        dt = time.perf_counter() - t0
+                 "evictions")
+
+    def _make_requests(self, er: ExecRequest, vocab: int,
+                       t0: float) -> List[Request]:
+        """One engine Request per payload prompt (or synthetic stand-in)."""
+        ers: List[Request] = []
+        if er.prompts:
+            for p in er.prompts:
+                ers.append(Request(
+                    rid=next(self._rid),
+                    prompt=np.asarray(p, np.int32),
+                    max_new_tokens=max(er.max_new_tokens, 1),
+                    arrival=t0, slo=er.slo))
+        else:
+            for _ in range(max(er.n_inputs, 1)):
+                ers.append(Request(
+                    rid=next(self._rid),
+                    prompt=self._synthetic_prompt(vocab),
+                    max_new_tokens=self.cfg.max_new, arrival=t0,
+                    slo=er.slo))
+        return ers
+
+    def _pump_stream(self, eng: ServingEngine,
+                     sinks: Dict[int, Tuple[ExecRequest, int]]) -> int:
+        """Forward freshly harvested partial outputs to their queries'
+        ``on_tokens`` sinks (no-op on non-streaming engines). Returns the
+        number of chunks delivered."""
+        if not eng.stream:
+            return 0
+        n = 0
+        for r, toks, t in eng.drain_partial_outputs():
+            ent = sinks.get(id(r))
+            if ent is not None:
+                er, idx = ent
+                if er.on_tokens is not None:
+                    er.on_tokens(idx, toks, t)
+                    n += 1
+        return n
+
+    def _record_occupancy(self, variant: Variant, batch: int, dt: float,
+                          occ0: Dict[str, int],
+                          eng: ServingEngine) -> None:
         # decision-log entry: per-run occupancy of the fused segments
         d = {k: eng.stats[k] - occ0[k] for k in occ0}
         total = d["busy_slot_steps"] + d["bubble_slot_steps"]
@@ -247,29 +252,73 @@ class EngineExecutor:
             "cow_copies": d["cow_copies"],
             "evictions": d["evictions"],
         })
-        for er, ers in groups:
-            if er.on_outputs is not None:
-                er.on_outputs([np.asarray(r.tokens, np.int32)
-                               for r in ers])
-            if er.on_report is not None:
-                # degradation report back to the control plane: a query
-                # whose requests were preempted (and recovered) completed
-                # degraded — identical tokens, borrowed time
-                npre = sum(r.preemptions for r in ers)
-                er.on_report({"preemptions": npre,
-                              "degraded": npre > 0})
-        # only synthetic runs calibrate t(b): they share one fixed
-        # (prompt_len, max_new) shape, so duration varies with batch count
-        # alone. Payload runs have arbitrary prompt/decode shapes and
-        # would corrupt the shared m/c fit that selection and autoscaling
-        # plan with (same hazard JaxExecutor.measured keys by prompt_len
-        # to avoid).
-        if not any(er.prompts for er in requests):
-            n = max(sum(len(ers) for _, ers in groups), 1)
-            obs = self.observations.setdefault(variant.name, {})
-            obs.setdefault(n, deque(maxlen=self.cfg.obs_window)).append(dt)
-            if prof.refit_profile(variant.profile, obs,
-                                  min_points=self.cfg.refit_min_points):
-                self.refits[variant.name] = \
-                    self.refits.get(variant.name, 0) + 1
-        return dt
+
+    @staticmethod
+    def _deliver(er: ExecRequest, ers: List[Request]) -> None:
+        """Hand a finished group's tokens and degradation report back."""
+        if er.on_outputs is not None:
+            er.on_outputs([np.asarray(r.tokens, np.int32) for r in ers])
+        if er.on_report is not None:
+            # degradation report back to the control plane: a query
+            # whose requests were preempted (and recovered) completed
+            # degraded — identical tokens, borrowed time
+            npre = sum(r.preemptions for r in ers)
+            er.on_report({"preemptions": npre, "degraded": npre > 0})
+
+    def _observe(self, variant: Variant, n: int, dt: float) -> None:
+        """Fold one synthetic-batch measurement into the t(b) fit."""
+        obs = self.observations.setdefault(variant.name, {})
+        obs.setdefault(n, deque(maxlen=self.cfg.obs_window)).append(dt)
+        if prof.refit_profile(variant.profile, obs,
+                              min_points=self.cfg.refit_min_points):
+            self.refits[variant.name] = \
+                self.refits.get(variant.name, 0) + 1
+
+    def run(self, variant: Variant, batch: int,
+            requests: Optional[List[ExecRequest]] = None) -> float:
+        """Serve one batch for real — each ExecRequest's payload prompts
+        (or synthetic stand-ins) become engine Requests; return the
+        measured service time, hand generated tokens back through each
+        request's ``on_outputs`` sink, and fold the measurement into the
+        variant's profile. With ``cfg.stream`` set, partial outputs are
+        forwarded to each request's ``on_tokens`` sink after every engine
+        step (synchronously, in emission order)."""
+        with self._lock:
+            eng = self._engine(variant)
+            vocab = self.arch_cfgs[variant.arch].vocab
+            if not requests:
+                requests = [ExecRequest(n_inputs=max(int(batch), 1))]
+            # compile any new prompt buckets outside the measured window,
+            # so a first-seen payload length doesn't bill XLA compile time
+            # as service time
+            real_lens = [len(p) for er in requests for p in er.prompts]
+            if real_lens:
+                eng.warmup(prompt_lens=real_lens)
+            groups: List[Tuple[ExecRequest, List[Request]]] = []
+            occ0 = {k: eng.stats[k] for k in self._OCC_KEYS}
+            t0 = time.perf_counter()
+            sinks: Dict[int, Tuple[ExecRequest, int]] = {}
+            for er in requests:
+                ers = self._make_requests(er, vocab, t0)
+                for i, r in enumerate(ers):
+                    eng.submit(r)
+                    sinks[id(r)] = (er, i)
+                groups.append((er, ers))
+            while eng.busy:
+                eng.step()
+                self._pump_stream(eng, sinks)
+            eng.drain_completions()
+            dt = time.perf_counter() - t0
+            self._record_occupancy(variant, batch, dt, occ0, eng)
+            for er, ers in groups:
+                self._deliver(er, ers)
+            # only synthetic runs calibrate t(b): they share one fixed
+            # (prompt_len, max_new) shape, so duration varies with batch
+            # count alone. Payload runs have arbitrary prompt/decode shapes
+            # and would corrupt the shared m/c fit that selection and
+            # autoscaling plan with (same hazard JaxExecutor.measured keys
+            # by prompt_len to avoid).
+            if not any(er.prompts for er in requests):
+                n = max(sum(len(ers) for _, ers in groups), 1)
+                self._observe(variant, n, dt)
+            return dt

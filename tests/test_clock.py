@@ -1,0 +1,129 @@
+"""Clock abstraction symmetry (ISSUE 8 satellite): both clocks implement
+the full scheduling surface — ``schedule`` / ``schedule_at`` / ``every`` /
+``next_event_time`` — so control-plane code written against ``Clock`` runs
+unchanged under the discrete-event ``EventLoop`` or the threaded
+``RealClock``."""
+import threading
+import time
+
+from repro.sim.clock import Clock, EventLoop, RealClock
+
+
+def test_both_clocks_expose_the_same_surface():
+    for loop in (EventLoop(), RealClock()):
+        for name in ("now", "schedule", "schedule_at", "every",
+                     "next_event_time", "run_until", "shutdown"):
+            assert callable(getattr(loop, name, None)), \
+                f"{type(loop).__name__} missing {name}"
+        if isinstance(loop, RealClock):
+            loop.shutdown()
+    assert EventLoop.virtual is True
+    assert RealClock.virtual is False
+    assert Clock.virtual is True      # default matches the sim path
+
+
+def test_eventloop_every_applies_jitter_to_every_interval():
+    """jitter is a per-task phase offset on *each* firing, not just the
+    first: two tasks with equal period but different jitter must never
+    collapse onto the same firing times."""
+    loop = EventLoop()
+    a, b = [], []
+    loop.every(10.0, lambda: a.append(loop.now()), jitter=1.0)
+    loop.every(10.0, lambda: b.append(loop.now()), jitter=3.0)
+    loop.run_until(70.0)
+    assert a == [11.0, 22.0, 33.0, 44.0, 55.0, 66.0]
+    assert b == [13.0, 26.0, 39.0, 52.0, 65.0]
+    assert not set(a) & set(b)
+
+
+def test_eventloop_every_stop_predicate():
+    loop = EventLoop()
+    fired = []
+    loop.every(5.0, lambda: fired.append(loop.now()),
+               stop=lambda: loop.now() > 12.0)
+    loop.run_until(100.0)
+    assert fired == [5.0, 10.0]
+
+
+def test_realclock_schedule_fires_in_deadline_order():
+    loop = RealClock()
+    try:
+        fired = []
+        done = threading.Event()
+        loop.schedule(0.10, lambda: (fired.append("late"), done.set()))
+        loop.schedule(0.01, lambda: fired.append("early"))
+        loop.schedule(0.05, lambda: fired.append("mid"))
+        assert done.wait(5.0)
+        assert fired == ["early", "mid", "late"]
+    finally:
+        loop.shutdown()
+
+
+def test_realclock_now_and_next_event_time():
+    loop = RealClock()
+    try:
+        t = loop.now()
+        assert t >= 0.0
+        assert loop.next_event_time() is None
+        loop.schedule_at(t + 60.0, lambda: None)
+        nxt = loop.next_event_time()
+        assert nxt is not None and nxt >= t + 59.0
+        assert loop.pending() == 1
+    finally:
+        loop.shutdown()
+
+
+def test_realclock_callbacks_may_schedule_more_work():
+    """every() chains tick -> schedule -> tick on the scheduler thread;
+    the lock must be released during callbacks for this to make progress."""
+    loop = RealClock()
+    try:
+        fired = []
+        enough = threading.Event()
+
+        def tick():
+            fired.append(loop.now())
+            if len(fired) >= 3:
+                enough.set()
+
+        loop.every(0.01, tick, stop=enough.is_set)
+        assert enough.wait(5.0)
+        assert len(fired) >= 3
+        assert fired == sorted(fired)
+    finally:
+        loop.shutdown()
+
+
+def test_realclock_survives_raising_callback():
+    loop = RealClock()
+    try:
+        ok = threading.Event()
+        loop.schedule(0.0, lambda: 1 / 0)
+        loop.schedule(0.02, ok.set)
+        assert ok.wait(5.0), "scheduler died after a raising callback"
+    finally:
+        loop.shutdown()
+
+
+def test_realclock_shutdown_drops_pending_and_rejects_new_work():
+    loop = RealClock()
+    fired = []
+    loop.schedule(30.0, lambda: fired.append("too late"))
+    loop.shutdown()
+    assert loop.pending() == 0
+    loop.schedule(0.0, lambda: fired.append("after stop"))   # no-op
+    time.sleep(0.05)
+    assert fired == []
+
+
+def test_realclock_run_until_blocks_while_events_fire():
+    loop = RealClock()
+    try:
+        fired = []
+        loop.schedule(0.03, lambda: fired.append(loop.now()))
+        t0 = loop.now()
+        loop.run_until(t0 + 0.08)
+        assert loop.now() >= t0 + 0.08
+        assert len(fired) == 1
+    finally:
+        loop.shutdown()

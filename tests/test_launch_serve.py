@@ -1,6 +1,13 @@
 """Smoke tests for the cluster serving launcher (``repro.launch.serve``):
-the simulated path, the real-backend path, and the standalone real-engine
-demo all run end to end with tiny configurations."""
+the simulated path, the real-backend path, the standalone real-engine
+demo, and the wall-clock streaming server all run end to end with tiny
+configurations."""
+import os
+import signal
+import subprocess
+import sys
+import time
+
 import pytest
 
 from repro.launch import serve
@@ -64,6 +71,50 @@ def test_launch_optimistic_requires_page_size():
     with pytest.raises(SystemExit, match="page-size"):
         serve.main(["--arch", "llama3.2-1b", "--real-engine",
                     "--admission", "optimistic"])
+
+
+def test_launch_wall_clock_requires_real_backend():
+    """--clock wall runs the control plane in real time; the sim executor
+    has nothing to execute, so the combination is rejected up front
+    rather than silently serving an idle wall clock."""
+    with pytest.raises(SystemExit, match="--backend real"):
+        serve.main(["--arch", "llama3.2-1b", "--clock", "wall"])
+    with pytest.raises(SystemExit, match="--backend real"):
+        serve.main(["--arch", "llama3.2-1b", "--clock", "wall",
+                    "--real-engine"])
+
+
+@pytest.mark.slow
+def test_launch_wall_clock_sigint_drains_clean():
+    """ISSUE 8 CI smoke: a live wall-clock server absorbs seeded Poisson
+    traffic, streams at least one token, and a SIGINT mid-run drains
+    in-flight work before a clean (exit 0) shutdown."""
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(root, "src") + os.pathsep + \
+        env.get("PYTHONPATH", "")
+    p = subprocess.Popen(
+        [sys.executable, "-c",
+         "from repro.launch import serve; serve.main("
+         "['--arch', 'llama3.2-1b', '--backend', 'real',"
+         " '--clock', 'wall', '--workers', '1', '--cpu-workers', '0',"
+         " '--rate', '2', '--duration', '60', '--slo-ms', '600000',"
+         " '--no-autoscale'])"],
+        cwd=root, env=env, stdout=subprocess.PIPE,
+        stderr=subprocess.STDOUT, text=True)
+    try:
+        # let it build the engine and serve a few seconds of live traffic
+        time.sleep(20.0)
+        p.send_signal(signal.SIGINT)
+        out, _ = p.communicate(timeout=120.0)
+    except Exception:
+        p.kill()
+        raise
+    assert p.returncode == 0, out
+    assert "SIGINT: draining in-flight work" in out, out
+    assert "clean shutdown: drained in-flight work" in out, out
+    tokens = int(out.split("streamed: ", 1)[1].split(" tokens", 1)[0])
+    assert tokens >= 1, out
 
 
 def test_launch_real_engine_demo_optimistic_smoke(capsys):
